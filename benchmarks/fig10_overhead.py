@@ -1,0 +1,35 @@
+"""Fig. 10: parsing overhead vs transferred tensor size — linear model fit
+quality per platform (paper §3.2.1)."""
+from __future__ import annotations
+
+from repro.core.overhead import OverheadModel
+from repro.core.paper_models import PLATFORMS
+from repro.emulator.cluster import probe_parse_overheads
+
+from .common import row, save_json
+
+SIZES = [1e5 * 2 ** i for i in range(10)]
+
+
+def run() -> dict:
+    out = {"figure": "fig10", "rows": []}
+    print("figure,platform,alpha_fit,beta_fit,alpha_true,beta_true,r2")
+    for name, plat in PLATFORMS.items():
+        if name.endswith("_test"):
+            continue
+        ys = probe_parse_overheads(plat, SIZES, seed=0)
+        m = OverheadModel.fit(SIZES, ys)
+        r2 = m.r_squared(SIZES, ys)
+        rec = {"platform": name, "alpha_fit": m.alpha, "beta_fit": m.beta,
+               "alpha_true": plat.overhead_alpha,
+               "beta_true": plat.overhead_beta, "r2": r2}
+        out["rows"].append(rec)
+        print(row("fig10", name, f"{m.alpha:.3e}", f"{m.beta:.3e}",
+                  f"{plat.overhead_alpha:.3e}",
+                  f"{plat.overhead_beta:.3e}", f"{r2:.4f}"))
+    save_json("fig10_overhead", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

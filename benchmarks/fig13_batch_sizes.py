@@ -1,0 +1,49 @@
+"""Fig. 13: throughput vs workers for AlexNet on the private CPU cluster,
+across batch sizes — our prediction vs measured, plus the Lin et al. and
+Cynthia baselines (paper §4.2, §4.4)."""
+from __future__ import annotations
+
+from repro.core.predictor import PredictionRun, prediction_error
+
+from .common import pct, row, save_json
+
+BATCHES = (4, 8, 16)
+WORKERS = (1, 2, 3, 4, 6, 8)
+
+
+def run(batches=BATCHES, workers=WORKERS, platform="private_cpu",
+        dnn="alexnet", profile_steps=50, sim_steps=350,
+        measure_steps=200) -> dict:
+    out = {"figure": "fig13", "dnn": dnn, "platform": platform, "rows": []}
+    print("figure,dnn,batch,W,measured,ours,lin,cynthia,cynthia2,our_err")
+    for bs in batches:
+        r = PredictionRun(dnn=dnn, batch_size=bs, platform=platform,
+                          profile_steps=profile_steps, sim_steps=sim_steps)
+        r.prepare()
+        for w in workers:
+            meas = r.measure_mean(w, steps=measure_steps)
+            ours = r.predict(w)
+            lin = r.predict_baseline(w, "lin")
+            cyn = r.predict_baseline(w, "cynthia")
+            cyn2 = r.predict_baseline(w, "cynthia2")
+            err = prediction_error(ours, meas)
+            rec = {"batch": bs, "W": w, "measured": meas, "ours": ours,
+                   "lin": lin, "cynthia": cyn, "cynthia2": cyn2,
+                   "our_err": err,
+                   "lin_err": prediction_error(lin, meas),
+                   "cynthia_err": prediction_error(cyn, meas)}
+            out["rows"].append(rec)
+            print(row("fig13", dnn, bs, w, f"{meas:.2f}", f"{ours:.2f}",
+                      f"{lin:.2f}", f"{cyn:.2f}", f"{cyn2:.2f}", pct(err)),
+                  flush=True)
+    errs = [x["our_err"] for x in out["rows"]]
+    out["max_err"] = max(errs)
+    out["mean_err"] = sum(errs) / len(errs)
+    save_json("fig13_batch_sizes", out)
+    print(f"# fig13 mean err {pct(out['mean_err'])} "
+          f"max {pct(out['max_err'])}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

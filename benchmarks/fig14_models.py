@@ -1,0 +1,38 @@
+"""Fig. 14: throughput vs workers across DNN models on the private CPU
+cluster (paper §4.2)."""
+from __future__ import annotations
+
+from repro.core.predictor import PredictionRun, prediction_error
+
+from .common import pct, row, save_json
+
+MODELS = ("googlenet", "inception_v3", "resnet50", "vgg11")
+WORKERS = (1, 2, 3, 4, 6)
+
+
+def run(models=MODELS, workers=WORKERS, batch=8, platform="private_cpu",
+        profile_steps=40, sim_steps=300, measure_steps=150) -> dict:
+    out = {"figure": "fig14", "platform": platform, "rows": []}
+    print("figure,dnn,W,measured,ours,our_err")
+    for dnn in models:
+        r = PredictionRun(dnn=dnn, batch_size=batch, platform=platform,
+                          profile_steps=profile_steps, sim_steps=sim_steps)
+        r.prepare()
+        for w in workers:
+            meas = r.measure_mean(w, steps=measure_steps)
+            ours = r.predict(w)
+            err = prediction_error(ours, meas)
+            out["rows"].append({"dnn": dnn, "W": w, "measured": meas,
+                                "ours": ours, "our_err": err})
+            print(row("fig14", dnn, w, f"{meas:.2f}", f"{ours:.2f}",
+                      pct(err)), flush=True)
+    errs = [x["our_err"] for x in out["rows"]]
+    out["max_err"] = max(errs)
+    out["mean_err"] = sum(errs) / len(errs)
+    save_json("fig14_models", out)
+    print(f"# fig14 mean err {pct(out['mean_err'])} max {pct(out['max_err'])}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Figs. 15/16: workers start synchronized and drift out of sync; step
+durations shrink as downlinks/uplinks interleave (paper §4.2)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.paper_models import PAPER_DNNS, PLATFORMS
+from repro.emulator.cluster import ClusterEmulator
+
+from .common import row, save_json
+
+
+def run(dnn="alexnet", batch=8, platform="private_cpu", workers=3,
+        steps=200) -> dict:
+    emu = ClusterEmulator(PAPER_DNNS[dnn], batch, PLATFORMS[platform],
+                          num_workers=workers, seed=0)
+    emu.run(steps_per_worker=steps)
+    # per-step durations of worker 0 over time
+    times = sorted([t for w, s, t in emu.step_completion_times if w == 0])
+    durs = np.diff([0.0] + times)
+    early = float(np.mean(durs[1:16]))
+    late = float(np.mean(durs[-30:]))
+    out = {"figure": "fig16", "dnn": dnn, "workers": workers,
+           "early_step_s": early, "late_step_s": late,
+           "speedup_after_desync": early / max(late, 1e-9),
+           "step_durations": durs.tolist()}
+    print("figure,dnn,W,early_step_s,late_step_s,speedup_after_desync")
+    print(row("fig16", dnn, workers, f"{early:.2f}", f"{late:.2f}",
+              f"{out['speedup_after_desync']:.2f}x"))
+    save_json("fig16_interleaving", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Figs. 17-19: flow control disabled + enforced transmission orders
+(TIC / reverse / random) — prediction accuracy (paper §3.3, §4.2)."""
+from __future__ import annotations
+
+from repro.core.predictor import PredictionRun, prediction_error
+
+from .common import pct, row, save_json
+
+ORDERS = ("layer", "reverse", "random")   # 'layer' == TIC for chains
+WORKERS = (1, 2, 4, 6)
+
+
+def run(dnn="alexnet", batch=8, workers=WORKERS, orders=ORDERS,
+        platform="private_cpu", profile_steps=40, sim_steps=300,
+        measure_steps=150, include_fc_off_models=True) -> dict:
+    out = {"figure": "fig18", "rows": []}
+    print("figure,dnn,order,W,measured,ours,err")
+    cases = [(dnn, o) for o in orders]
+    if include_fc_off_models:
+        cases += [("googlenet", "layer"), ("resnet50", "layer")]
+    for dnn_i, order in cases:
+        r = PredictionRun(dnn=dnn_i, batch_size=batch, platform=platform,
+                          flow_control=False, order=order,
+                          profile_steps=profile_steps, sim_steps=sim_steps)
+        r.prepare()
+        for w in workers:
+            meas = r.measure_mean(w, steps=measure_steps)
+            ours = r.predict(w)
+            err = prediction_error(ours, meas)
+            out["rows"].append({"dnn": dnn_i, "order": order, "W": w,
+                                "measured": meas, "ours": ours,
+                                "err": err})
+            print(row("fig18", dnn_i, order, w, f"{meas:.2f}",
+                      f"{ours:.2f}", pct(err)), flush=True)
+    errs = [x["err"] for x in out["rows"]]
+    out["max_err"] = max(errs)
+    out["mean_err"] = sum(errs) / len(errs)
+    save_json("fig18_orderings", out)
+    print(f"# fig18 mean err {pct(out['mean_err'])} max {pct(out['max_err'])}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

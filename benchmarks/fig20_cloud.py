@@ -1,0 +1,50 @@
+"""Figs. 20-21: prediction on the (noisier) cloud platforms — AWS CPU and
+AWS GPU clusters (paper §4.3)."""
+from __future__ import annotations
+
+from repro.core.predictor import PredictionRun, prediction_error
+
+from .common import pct, row, save_json
+
+CASES = (
+    # (platform, dnn, batch)
+    ("aws_cpu", "alexnet", 16),
+    ("aws_cpu", "inception_v3", 8),
+    ("aws_cpu", "resnet50", 8),
+    ("aws_gpu", "inception_v3", 64),
+    ("aws_gpu", "resnet50", 32),
+    ("aws_gpu", "alexnet", 128),
+    ("aws_gpu", "vgg11", 32),
+)
+WORKERS = (1, 2, 4, 6, 8)
+
+
+def run(cases=CASES, workers=WORKERS, profile_steps=40, sim_steps=300,
+        measure_steps=150) -> dict:
+    out = {"figure": "fig20_21", "rows": []}
+    print("figure,platform,dnn,batch,W,measured,ours,err")
+    for plat, dnn, bs in cases:
+        r = PredictionRun(dnn=dnn, batch_size=bs, platform=plat,
+                          profile_steps=profile_steps, sim_steps=sim_steps)
+        r.prepare()
+        for w in workers:
+            meas = r.measure_mean(w, steps=measure_steps)
+            ours = r.predict(w)
+            err = prediction_error(ours, meas)
+            out["rows"].append({"platform": plat, "dnn": dnn, "batch": bs,
+                                "W": w, "measured": meas, "ours": ours,
+                                "err": err})
+            print(row("fig20", plat, dnn, bs, w, f"{meas:.2f}",
+                      f"{ours:.2f}", pct(err)), flush=True)
+    cpu = [x["err"] for x in out["rows"] if x["platform"] == "aws_cpu"]
+    gpu = [x["err"] for x in out["rows"] if x["platform"] == "aws_gpu"]
+    out["cpu_max_err"] = max(cpu) if cpu else None
+    out["gpu_max_err"] = max(gpu) if gpu else None
+    save_json("fig20_cloud", out)
+    print(f"# fig20 aws_cpu max err {pct(out['cpu_max_err'])}; "
+          f"fig21 aws_gpu max err {pct(out['gpu_max_err'])}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

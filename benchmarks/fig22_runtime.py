@@ -1,0 +1,69 @@
+"""Fig. 22: cost/time of direct measurement vs profile-once + simulate
+(paper §4.5).  Measures wall-clock of (a) emulating W=1..Wmax clusters for
+100 steps each (standing in for real training) and (b) our method: one
+1-worker profile + DES prediction for every W."""
+from __future__ import annotations
+
+import time
+
+from repro.core.predictor import PredictionRun
+
+from .common import row, save_json
+
+
+GPU_INSTANCE_HOURLY = 3.06   # p3.2xlarge (paper §4.5)
+CPU_INSTANCE_HOURLY = 0.10   # c4.large
+
+
+def run(dnn="inception_v3", batch=16, platform="aws_gpu", wmax=8,
+        measure_steps=100, profile_steps=60, sim_steps=400) -> dict:
+    """Direct measurement costs CLUSTER time (the emulator tells us how
+    long the real cluster would run: its simulated clock); our method costs
+    (1-worker profile cluster time) + (simulation wall time on one CPU)."""
+    from repro.core.paper_models import PAPER_DNNS, PLATFORMS
+    from repro.emulator.cluster import ClusterEmulator
+
+    cluster_seconds = 0.0          # real-cluster time to measure W=1..wmax
+    gpu_hours = 0.0
+    for w in range(1, wmax + 1):
+        emu = ClusterEmulator(PAPER_DNNS[dnn], batch, PLATFORMS[platform],
+                              num_workers=w, seed=123 + w)
+        emu.run(steps_per_worker=measure_steps)
+        end = max(t for _w, _s, t in emu.step_completion_times)
+        cluster_seconds += end
+        gpu_hours += end / 3600.0 * (w + 1)      # workers + 1 PS
+
+    # our method: 1-worker profile (cluster time) + DES on one CPU core
+    t0 = time.time()
+    r = PredictionRun(dnn=dnn, batch_size=batch, platform=platform,
+                      profile_steps=profile_steps, sim_steps=sim_steps)
+    r.prepare()
+    profile_cluster_s = max(op.end for op in r.profile[-1].ops)
+    for w in range(2, wmax + 1):
+        r.predict(w, n_runs=1)
+    t_sim_wall = time.time() - t0
+    ours_seconds = profile_cluster_s + t_sim_wall
+    ours_dollars = (profile_cluster_s / 3600.0 * 2 * GPU_INSTANCE_HOURLY
+                    + t_sim_wall / 3600.0 * CPU_INSTANCE_HOURLY)
+    direct_dollars = gpu_hours * GPU_INSTANCE_HOURLY
+
+    out = {"figure": "fig22", "dnn": dnn, "platform": platform,
+           "wmax": wmax, "direct_cluster_s": cluster_seconds,
+           "direct_dollars": direct_dollars,
+           "profile_cluster_s": profile_cluster_s,
+           "simulate_wall_s": t_sim_wall, "ours_seconds": ours_seconds,
+           "ours_dollars": ours_dollars,
+           "time_speedup": cluster_seconds / max(ours_seconds, 1e-9),
+           "cost_ratio": direct_dollars / max(ours_dollars, 1e-9)}
+    print("figure,dnn,direct_cluster_s,ours_s,time_speedup,"
+          "direct_$,ours_$,cost_ratio")
+    print(row("fig22", dnn, f"{cluster_seconds:.0f}",
+              f"{ours_seconds:.0f}", f"{out['time_speedup']:.1f}x",
+              f"{direct_dollars:.2f}", f"{ours_dollars:.3f}",
+              f"{out['cost_ratio']:.0f}x"))
+    save_json("fig22_runtime", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+"""Figs. 23/25: two parameter servers — uneven greedy split and prediction
+accuracy with the §5 bandwidth-sharing model (paper §5)."""
+from __future__ import annotations
+
+from repro.core.paper_models import PAPER_DNNS
+from repro.core.predictor import PredictionRun, prediction_error
+from repro.profiling.tracer import ps_split_bytes
+
+from .common import pct, row, save_json
+
+CASES = (("vgg11", 32), ("inception_v3", 32), ("resnet50", 32))
+WORKERS = (1, 2, 4, 6, 8)
+
+
+def run(cases=CASES, workers=WORKERS, platform="aws_gpu",
+        profile_steps=40, sim_steps=300, measure_steps=120) -> dict:
+    out = {"figure": "fig25", "rows": [], "splits": {}}
+    # Fig. 23: the greedy per-layer split is uneven
+    for dnn in PAPER_DNNS:
+        split = ps_split_bytes(PAPER_DNNS[dnn], 2)
+        out["splits"][dnn] = split
+    print("fig23,dnn,ps1_bytes,ps2_bytes,ratio")
+    for dnn, split in out["splits"].items():
+        hi, lo = max(split), max(min(split), 1.0)
+        print(row("fig23", dnn, f"{split[0]:.3e}", f"{split[1]:.3e}",
+                  f"{hi / lo:.2f}"))
+
+    print("figure,dnn,W,meas_2ps,pred_2ps,err,meas_1ps")
+    for dnn, bs in cases:
+        r2 = PredictionRun(dnn=dnn, batch_size=bs, platform=platform,
+                           num_ps=2, profile_steps=profile_steps,
+                           sim_steps=sim_steps)
+        r2.prepare()
+        r1 = PredictionRun(dnn=dnn, batch_size=bs, platform=platform,
+                           num_ps=1, profile_steps=profile_steps,
+                           sim_steps=sim_steps)
+        r1.prepare()
+        for w in workers:
+            meas2 = r2.measure_mean(w, steps=measure_steps)
+            pred2 = r2.predict(w)
+            meas1 = r1.measure_mean(w, steps=measure_steps)
+            err = prediction_error(pred2, meas2)
+            out["rows"].append({"dnn": dnn, "W": w, "meas_2ps": meas2,
+                                "pred_2ps": pred2, "err": err,
+                                "meas_1ps": meas1})
+            print(row("fig25", dnn, w, f"{meas2:.2f}", f"{pred2:.2f}",
+                      pct(err), f"{meas1:.2f}"), flush=True)
+    errs = [x["err"] for x in out["rows"]]
+    out["max_err"] = max(errs)
+    out["mean_err"] = sum(errs) / len(errs)
+    save_json("fig25_two_ps", out)
+    print(f"# fig25 mean err {pct(out['mean_err'])} max {pct(out['max_err'])}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,85 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads benchmarks/results/dryrun_single_pod.json (produced by
+``python -m repro.launch.dryrun --all --single-pod-only --out ...``) and
+emits the per-(arch x shape) roofline terms, dominant bottleneck, useful-
+FLOPs ratio and MFU bound as CSV + a markdown table.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import List, Optional
+
+from .common import RESULTS_DIR, row, save_json
+
+SINGLE_POD = os.path.join(RESULTS_DIR, "dryrun_single_pod.json")
+
+
+def load(path: str = SINGLE_POD) -> List[dict]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def markdown_table(records: List[dict]) -> str:
+    lines = [
+        "| arch | shape | mem/dev | t_comp | t_mem | t_coll | bound | "
+        "useful | MFU bound |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in records:
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                         f"skipped | — | — |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | | |")
+            continue
+        rf = r["roofline"]
+        mem = r["memory"].get("total_bytes_per_device", 0) / 2 ** 30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {mem:.1f} GiB "
+            f"| {rf['t_compute_s'] * 1e3:.1f} ms "
+            f"| {rf['t_memory_s'] * 1e3:.1f} ms "
+            f"| {rf['t_collective_s'] * 1e3:.1f} ms "
+            f"| {rf['bottleneck']} "
+            f"| {rf['useful_flops_ratio']:.2f} "
+            f"| {rf['mfu_bound']:.3f} |")
+    return "\n".join(lines)
+
+
+def run(path: str = SINGLE_POD) -> Optional[dict]:
+    if not os.path.exists(path):
+        print(f"# roofline: {path} missing — run the dry-run first")
+        return None
+    records = load(path)
+    print("arch,shape,status,bound,t_comp_ms,t_mem_ms,t_coll_ms,"
+          "useful_ratio,mfu_bound,mem_gib")
+    for r in records:
+        if r["status"] != "ok":
+            print(row(r["arch"], r["shape"], r["status"],
+                      r.get("reason", r.get("error", ""))[:40], 0, 0, 0,
+                      0, 0, 0))
+            continue
+        rf = r["roofline"]
+        print(row(r["arch"], r["shape"], "ok", rf["bottleneck"],
+                  f"{rf['t_compute_s'] * 1e3:.1f}",
+                  f"{rf['t_memory_s'] * 1e3:.1f}",
+                  f"{rf['t_collective_s'] * 1e3:.1f}",
+                  f"{rf['useful_flops_ratio']:.2f}",
+                  f"{rf['mfu_bound']:.3f}",
+                  f"{r['memory'].get('total_bytes_per_device', 0) / 2**30:.1f}"))
+    md = markdown_table(records)
+    out = {"markdown": md,
+           "n_ok": sum(r["status"] == "ok" for r in records),
+           "n_skip": sum(r["status"] == "skipped" for r in records)}
+    save_json("roofline_table", out)
+    with open(os.path.join(RESULTS_DIR, "roofline_table.md"), "w") as f:
+        f.write(md + "\n")
+    print(f"# roofline: {out['n_ok']} ok, {out['n_skip']} skipped; "
+          f"markdown at benchmarks/results/roofline_table.md")
+    return out
+
+
+if __name__ == "__main__":
+    run()

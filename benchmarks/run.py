@@ -1,0 +1,84 @@
+"""Benchmark driver: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only fig13,...]
+
+Emits CSV lines per figure and JSON artifacts under benchmarks/results/.
+The roofline table additionally requires the dry-run artifact
+(``python -m repro.launch.dryrun --all --single-pod-only``).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller sweeps (CI-sized)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset (fig13,fig14,table1,"
+                         "fig10,fig18,fig20,fig22,fig25,fig16,roofline)")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from . import (fig10_overhead, fig13_batch_sizes, fig14_models,
+                   fig16_interleaving, fig18_orderings, fig20_cloud,
+                   fig22_runtime, fig25_two_ps, roofline,
+                   table1_multiplexing)
+
+    fast = args.fast
+    jobs = [
+        ("fig10", lambda: fig10_overhead.run()),
+        ("fig13", lambda: fig13_batch_sizes.run(
+            batches=(4, 8) if fast else (4, 8, 16),
+            workers=(1, 2, 4) if fast else (1, 2, 3, 4, 6, 8),
+            profile_steps=30 if fast else 50,
+            sim_steps=250 if fast else 350,
+            measure_steps=120 if fast else 200)),
+        ("fig14", lambda: fig14_models.run(
+            models=("googlenet", "resnet50") if fast else
+            ("googlenet", "inception_v3", "resnet50", "vgg11"),
+            workers=(1, 2, 4) if fast else (1, 2, 3, 4, 6))),
+        ("table1", lambda: table1_multiplexing.run(
+            models=("alexnet", "googlenet") if fast else
+            ("alexnet", "googlenet", "inception_v3", "resnet50"),
+            profile_steps=30 if fast else 60)),
+        ("fig18", lambda: fig18_orderings.run(
+            workers=(1, 2, 4) if fast else (1, 2, 4, 6),
+            include_fc_off_models=not fast)),
+        ("fig20", lambda: fig20_cloud.run(
+            workers=(1, 2, 4) if fast else (1, 2, 4, 6, 8),
+            cases=fig20_cloud.CASES[:3] if fast else fig20_cloud.CASES)),
+        ("fig16", lambda: fig16_interleaving.run(
+            steps=80 if fast else 120)),
+        ("fig22", lambda: fig22_runtime.run(wmax=4 if fast else 8)),
+        ("fig25", lambda: fig25_two_ps.run(
+            cases=(("vgg11", 32),) if fast else fig25_two_ps.CASES,
+            workers=(1, 2, 4) if fast else (1, 2, 4, 6, 8))),
+        ("roofline", lambda: roofline.run()),
+    ]
+
+    failures = []
+    t_all = time.time()
+    for name, fn in jobs:
+        if only and name not in only:
+            continue
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+        print(f"# {name} took {time.time() - t0:.1f}s", flush=True)
+    print(f"\n# total {time.time() - t_all:.1f}s; "
+          f"failures: {failures or 'none'}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

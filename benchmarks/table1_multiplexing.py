@@ -1,0 +1,81 @@
+"""Table 1: error of end-time prediction of downlink streams.
+
+Validates the HTTP/2 WIN multiplexing model in isolation (paper §3.2.2):
+for each profiled 1-worker step, predict every downlink stream's end time
+(constant-WIN chunked schedule + parse overhead at nominal bandwidth) and
+compare with the recorded end time.  Statistics over ~100 steps.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.events import ps_resources
+from repro.core.overhead import preprocess_recorded_step
+from repro.core.predictor import PredictionRun
+from repro.core.simulator import SimConfig, Simulation
+
+from .common import pct, row, save_json
+
+MODELS = ("alexnet", "googlenet", "inception_v3", "resnet50")
+PLATFORMS = ("private_cpu", "aws_cpu")
+
+
+def stream_endtime_errors(run: PredictionRun) -> list:
+    """Per-stream relative end-time error across profiled steps."""
+    plat_band = None
+    errs = []
+    for step in run.profile:
+        t0 = min(op.start for op in step.ops)
+        meas = {op.name: op.end - t0 for op in step.ops
+                if op.res.startswith("downlink")}
+        tpl = preprocess_recorded_step(step, run.overhead)
+        cfg = SimConfig(
+            resources=ps_resources(
+                __import__("repro.core.paper_models",
+                           fromlist=["PLATFORMS"]).PLATFORMS[
+                    run.platform].bandwidth, run.num_ps),
+            link_policy="http2", win=run.win_estimate or
+            __import__("repro.core.paper_models",
+                       fromlist=["PLATFORMS"]).PLATFORMS[
+                run.platform].win_mu,
+            steps_per_worker=1, warmup_steps=0, record_op_times=True)
+        sim = Simulation(cfg)
+        trace = sim.run([tpl], 1, sample=False)
+        pred = {}
+        for w, seq, name, res, s, e in trace.op_times:
+            if res.startswith("downlink"):
+                # end as seen by TF = transfer end + parse: use parse op end
+                pred[name] = e
+            if name.endswith("/parse") and name[:-6] in pred:
+                pred[name[:-6]] = e
+        for name, m in meas.items():
+            if name in pred and m > 0:
+                errs.append(abs(pred[name] - m) / m)
+    return errs
+
+
+def run(models=MODELS, platforms=PLATFORMS, batch=8,
+        profile_steps=60) -> dict:
+    out = {"table": "table1", "rows": []}
+    print("table,dnn,platform,avg,median,p95,max,n")
+    for plat in platforms:
+        for dnn in models:
+            r = PredictionRun(dnn=dnn, batch_size=batch, platform=plat,
+                              profile_steps=profile_steps)
+            r.prepare()
+            errs = np.array(stream_endtime_errors(r))
+            rec = {"dnn": dnn, "platform": plat,
+                   "avg": float(errs.mean()),
+                   "median": float(np.median(errs)),
+                   "p95": float(np.percentile(errs, 95)),
+                   "max": float(errs.max()), "n": int(errs.size)}
+            out["rows"].append(rec)
+            print(row("table1", dnn, plat, pct(rec["avg"]),
+                      pct(rec["median"]), pct(rec["p95"]),
+                      pct(rec["max"]), rec["n"]), flush=True)
+    save_json("table1_multiplexing", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

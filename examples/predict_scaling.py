@@ -1,0 +1,38 @@
+"""The paper's technique as a TPU deployment tool: predict multi-pod step
+time, straggler impact and gradient-compression wins from the op-level DAG
+(core/tpu_adapter.py), before buying any hardware.
+
+Run:  PYTHONPATH=src python examples/predict_scaling.py
+"""
+from repro.configs import get_config
+from repro.core.tpu_adapter import (MeshFactors, build_step_dag,
+                                    predict_step_time)
+
+cfg = get_config("granite-8b")
+tokens = 4096 * 256
+
+print(f"{cfg.name}: DES-predicted training step time (train_4k)\n")
+print(f"{'pods':>5s} {'chips':>6s} {'step':>9s} {'scale-eff':>9s} "
+      f"{'straggler(1.3x)':>16s} {'int8-DCN':>9s}")
+base = None
+for pods in (1, 2, 4, 8):
+    mesh = MeshFactors(pods=pods)
+    dag = build_step_dag(cfg, mesh, tokens)
+    t = predict_step_time(dag, num_pods=pods)
+    if base is None:
+        base = t * mesh.chips
+    eff = base / (t * mesh.chips)
+    t_st = predict_step_time(dag, num_pods=pods, straggler_factor=1.3)
+    t_c = predict_step_time(
+        build_step_dag(cfg, mesh, tokens, compressed_dcn=0.25),
+        num_pods=pods) if pods > 1 else t
+    print(f"{pods:5d} {mesh.chips:6d} {t*1e3:7.1f}ms {eff:8.1%} "
+          f"{t_st*1e3:14.1f}ms {t_c*1e3:7.1f}ms")
+
+print("\nChunked-collective what-if (the paper's WIN model on ICI):")
+mesh = MeshFactors(pods=2)
+dag = build_step_dag(cfg, mesh, tokens)
+for win in (0, 64e6, 16e6, 4e6):
+    t = predict_step_time(dag, num_pods=2, win_bytes=win)
+    label = "unchunked" if win == 0 else f"{win/1e6:.0f}MB chunks"
+    print(f"  {label:14s} {t*1e3:7.1f} ms/step")

@@ -1,0 +1,34 @@
+"""Quickstart: the paper's workflow end to end in ~30 seconds on CPU.
+
+1. profile a training job with ONE worker (the emulated cluster stands in
+   for the paper's real TensorFlow clusters);
+2. calibrate the platform's parse-overhead model (Fig. 10);
+3. predict throughput for W = 1..8 workers with the DES (Algorithm 3.1);
+4. compare against independently measured multi-worker throughput.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core.predictor import PredictionRun, prediction_error
+
+run = PredictionRun(dnn="alexnet", batch_size=8, platform="private_cpu",
+                    profile_steps=40, sim_steps=300)
+run.prepare()
+print(f"profiled {len(run.profile)} steps "
+      f"({len(run.profile[0].ops)} ops each); overhead model: "
+      f"alpha={run.overhead.alpha:.2e} s/B, beta={run.overhead.beta:.2e} s")
+
+print(f"\n{'W':>3s} {'predicted':>10s} {'measured':>10s} {'error':>7s}")
+for w in (1, 2, 4, 8):
+    pred = run.predict(w)
+    meas = run.measure_mean(w, steps=150)
+    err = prediction_error(pred, meas)
+    print(f"{w:3d} {pred:8.2f}/s {meas:8.2f}/s {err:6.1%}")
+
+print("\nBaselines at W=6 (paper §4.4):")
+meas = run.measure_mean(6, steps=150)
+for name in ("lin", "cynthia", "cynthia2"):
+    p = run.predict_baseline(6, name)
+    print(f"  {name:10s} {p:7.2f}/s (err {prediction_error(p, meas):6.1%})")
+print(f"  {'ours':10s} {run.predict(6):7.2f}/s "
+      f"(err {prediction_error(run.predict(6), meas):6.1%}; "
+      f"measured {meas:.2f}/s)")

@@ -1,0 +1,15 @@
+"""Batched serving example: prefill + greedy decode with per-arch
+cache/state (KV cache for attention archs, recurrent state for xLSTM /
+RecurrentGemma).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py [--arch recurrentgemma-2b]
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    if len(sys.argv) == 1:
+        sys.argv += ["--arch", "recurrentgemma-2b", "--batch", "4",
+                     "--prompt-len", "16", "--gen", "32"]
+    main()

@@ -1,0 +1,20 @@
+# The paper's primary contribution: trace-driven discrete-event simulation
+# for asynchronous-SGD throughput prediction (Li et al., ICPE'20), plus the
+# coarse baselines it compares against and the TPU adaptation layer.
+from .bandwidth import BandwidthModel, EqualShareModel
+from .events import (COMPUTE, LINK, Op, ResourceSpec, StepTemplate, Trace,
+                     ps_resources)
+from .overhead import (OverheadModel, RecordedOp, RecordedStep,
+                       preprocess_profile, preprocess_recorded_step)
+from .paper_models import PAPER_DNNS, PLATFORMS
+from .predictor import PredictionRun, calibrate_overhead, prediction_error, sweep
+from .simulator import SimConfig, Simulation, predict_throughput
+
+__all__ = [
+    "BandwidthModel", "EqualShareModel", "COMPUTE", "LINK", "Op",
+    "ResourceSpec", "StepTemplate", "Trace", "ps_resources", "OverheadModel",
+    "RecordedOp", "RecordedStep", "preprocess_profile",
+    "preprocess_recorded_step", "PAPER_DNNS", "PLATFORMS", "PredictionRun",
+    "calibrate_overhead", "prediction_error", "sweep", "SimConfig",
+    "Simulation", "predict_throughput",
+]

@@ -1,0 +1,118 @@
+"""Bandwidth-sharing models (paper §3.1 and §5).
+
+Single PS (§3.1): each of the ``n`` workers actively transmitting or
+receiving gets ``1/n`` of the link in that direction; compute resources are
+private (share = 1).
+
+Two PS (§5): all active connections to the same PS share its bandwidth
+equally, but a worker's NIC caps its total share per direction: a worker
+alone on PS1 while sharing PS2 with n-1 others gets 1/n on PS2 and at most
+1 - 1/n on PS1.
+
+We implement the general **max-min water-filling** allocation over the
+bipartite graph of (worker NIC, direction) and (PS link, direction)
+capacities, which reduces exactly to both paper rules:
+
+  * one PS, n active workers -> PS capacity saturates first -> 1/n each;
+  * the §5 example -> PS2 conns freeze at 1/n, then the lone PS1 conn rises
+    until the worker NIC saturates at 1 - 1/n.
+
+This also extends to M > 2 parameter servers (the paper's stated future
+work) and to heterogeneous capacities.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Mapping, Set, Tuple
+
+# A connection is (worker, link_resource_name); shares are fractions of the
+# nominal link bandwidth B (homogeneous NICs assumed, as in the paper).
+Conn = Tuple[int, str]
+
+
+def _direction_of(res_name: str) -> str:
+    return res_name.split(":")[0]  # 'downlink' / 'uplink' (index stripped)
+
+
+class BandwidthModel:
+    """Max-min fair shares under per-link and per-worker-NIC capacity."""
+
+    def __init__(self, worker_nic_capacity: float = 1.0,
+                 link_capacity: float = 1.0):
+        self.worker_nic_capacity = worker_nic_capacity
+        self.link_capacity = link_capacity
+
+    def shares(self, active: Mapping[str, Set[int]]) -> Dict[Conn, float]:
+        """``active`` maps link resource name -> set of active workers.
+
+        Returns share in (0, 1] for every active connection.
+        """
+        conns = [(w, r) for r, ws in active.items() for w in ws]
+        if not conns:
+            return {}
+
+        # Constraint groups: each link, and each (worker, direction) NIC.
+        link_members: Dict[str, list] = {}
+        nic_members: Dict[Tuple[int, str], list] = {}
+        for c in conns:
+            w, r = c
+            link_members.setdefault(r, []).append(c)
+            nic_members.setdefault((w, _direction_of(r)), []).append(c)
+
+        caps: Dict[object, float] = {}
+        members: Dict[object, list] = {}
+        for r, ms in link_members.items():
+            caps[("link", r)] = self.link_capacity
+            members[("link", r)] = ms
+        for k, ms in nic_members.items():
+            caps[("nic",) + k] = self.worker_nic_capacity
+            members[("nic",) + k] = ms
+
+        share: Dict[Conn, float] = {c: 0.0 for c in conns}
+        frozen: Set[Conn] = set()
+        remaining_cap = dict(caps)
+        # Progressive filling: raise unfrozen conns equally until some
+        # constraint saturates; freeze its members; repeat.
+        for _ in range(len(caps) + 1):
+            unfrozen = [c for c in conns if c not in frozen]
+            if not unfrozen:
+                break
+            # headroom per constraint divided by its unfrozen member count
+            best_delta = None
+            for key, ms in members.items():
+                n_unfrozen = sum(1 for c in ms if c not in frozen)
+                if n_unfrozen == 0:
+                    continue
+                delta = remaining_cap[key] / n_unfrozen
+                if best_delta is None or delta < best_delta:
+                    best_delta = delta
+            if best_delta is None:
+                break
+            # apply the raise
+            for c in unfrozen:
+                share[c] += best_delta
+            for key, ms in members.items():
+                n_unfrozen = sum(1 for c in ms if c not in frozen)
+                remaining_cap[key] -= best_delta * n_unfrozen
+            # freeze members of (now) saturated constraints
+            for key, ms in members.items():
+                if remaining_cap[key] <= 1e-12:
+                    for c in ms:
+                        frozen.add(c)
+        return share
+
+
+class EqualShareModel(BandwidthModel):
+    """The single-PS paper model (§3.1): share = 1/n on each link,
+    ignoring NIC coupling entirely. Kept as the paper-faithful default for
+    1-PS simulations (identical results to water-filling there, but cheaper
+    and exactly the published rule)."""
+
+    def shares(self, active: Mapping[str, Set[int]]) -> Dict[Conn, float]:
+        out: Dict[Conn, float] = {}
+        for r, ws in active.items():
+            if not ws:
+                continue
+            s = 1.0 / len(ws)
+            for w in ws:
+                out[(w, r)] = s
+        return out

@@ -1,0 +1,272 @@
+"""Core data structures for trace-driven throughput prediction.
+
+The paper (Li et al., ICPE'20) represents each SGD step as a DAG of
+*operations*, each bound to exactly one resource:
+
+  - ``downlink`` / ``uplink``: the parameter server's transmit/receive
+    channels (shared among workers, equal-share bandwidth);
+  - ``worker`` / ``ps``: compute units (private per worker).
+
+With M parameter servers the link/compute resources are indexed per server
+(``downlink:0``, ``uplink:1``, ``ps:0`` ...).  The TPU adapter reuses the
+same structures with resources such as ``mxu`` / ``hbm`` / ``ici`` / ``dcn``.
+
+Communication ops carry a payload ``size`` in bytes; their service demand is
+``size / bandwidth`` at full-rate.  Compute ops carry a ``duration`` in
+seconds.  Internally the simulator works with a uniform ``work`` quantity:
+bytes for link resources, seconds for compute resources.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Resources
+# ---------------------------------------------------------------------------
+
+LINK = "link"
+COMPUTE = "compute"
+
+
+@dataclass(frozen=True)
+class ResourceSpec:
+    """A named resource class used by ops.
+
+    ``kind == LINK``    -> shared among active workers; ``bandwidth`` in B/s.
+    ``kind == COMPUTE`` -> private per worker (share == 1); work in seconds.
+    """
+
+    name: str
+    kind: str
+    bandwidth: float = 0.0  # bytes/s; only meaningful for LINK resources
+
+    def __post_init__(self):
+        if self.kind not in (LINK, COMPUTE):
+            raise ValueError(f"bad resource kind: {self.kind!r}")
+        if self.kind == LINK and self.bandwidth <= 0:
+            raise ValueError(f"link resource {self.name!r} needs bandwidth > 0")
+
+
+def ps_resources(bandwidth: float, num_ps: int = 1) -> Dict[str, ResourceSpec]:
+    """The paper's resource set for ``num_ps`` parameter servers.
+
+    For one PS the canonical names are downlink/uplink/worker/ps; for M > 1
+    the link and ps-compute resources are indexed per server.
+    """
+    res: Dict[str, ResourceSpec] = {
+        "worker": ResourceSpec("worker", COMPUTE),
+        # dedicated recv/parse thread at the worker (gRPC deserialization
+        # runs off the main compute unit; see overhead.py)
+        "parse": ResourceSpec("parse", COMPUTE),
+    }
+    if num_ps == 1:
+        res["downlink"] = ResourceSpec("downlink", LINK, bandwidth)
+        res["uplink"] = ResourceSpec("uplink", LINK, bandwidth)
+        res["ps"] = ResourceSpec("ps", COMPUTE)
+    else:
+        for i in range(num_ps):
+            res[f"downlink:{i}"] = ResourceSpec(f"downlink:{i}", LINK, bandwidth)
+            res[f"uplink:{i}"] = ResourceSpec(f"uplink:{i}", LINK, bandwidth)
+            res[f"ps:{i}"] = ResourceSpec(f"ps:{i}", COMPUTE)
+    return res
+
+
+# ---------------------------------------------------------------------------
+# Operations
+# ---------------------------------------------------------------------------
+
+_uid_counter = itertools.count()
+
+
+@dataclass
+class Op:
+    """One operation of a profiled SGD step (template form).
+
+    ``deps`` lists indices (within the owning :class:`StepTemplate`) of ops
+    that must complete before this op may start.  For LINK resources ``size``
+    (bytes) defines the work; for COMPUTE resources ``duration`` (seconds).
+    """
+
+    name: str
+    res: str
+    size: float = 0.0      # bytes, for link ops
+    duration: float = 0.0  # seconds, for compute ops
+    deps: Tuple[int, ...] = ()
+    # Optional scheduling priority (e.g. TIC order). Lower = served earlier
+    # by ordered schedulers; ignored by FIFO/HTTP2 schedulers.
+    priority: float = 0.0
+    # Free-form tags (layer index, phase, ...) for analysis.
+    tags: Dict[str, object] = field(default_factory=dict)
+
+    def work(self, resources: Dict[str, ResourceSpec]) -> float:
+        spec = resources[self.res]
+        return self.size if spec.kind == LINK else self.duration
+
+
+@dataclass
+class StepTemplate:
+    """A profiled SGD step: ops indexed 0..n-1 with intra-step deps."""
+
+    ops: List[Op]
+    meta: Dict[str, object] = field(default_factory=dict)
+
+    def __post_init__(self):
+        n = len(self.ops)
+        for i, op in enumerate(self.ops):
+            for d in op.deps:
+                if not (0 <= d < n):
+                    raise ValueError(f"op {i} ({op.name}) has dep {d} out of range")
+                if d == i:
+                    raise ValueError(f"op {i} ({op.name}) depends on itself")
+        self._check_acyclic()
+
+    def _check_acyclic(self):
+        n = len(self.ops)
+        indeg = [0] * n
+        out: List[List[int]] = [[] for _ in range(n)]
+        for i, op in enumerate(self.ops):
+            indeg[i] = len(op.deps)
+            for d in op.deps:
+                out[d].append(i)
+        stack = [i for i in range(n) if indeg[i] == 0]
+        seen = 0
+        while stack:
+            i = stack.pop()
+            seen += 1
+            for j in out[i]:
+                indeg[j] -= 1
+                if indeg[j] == 0:
+                    stack.append(j)
+        if seen != n:
+            raise ValueError("step dependency graph has a cycle")
+
+    def roots(self) -> List[int]:
+        return [i for i, op in enumerate(self.ops) if not op.deps]
+
+    def total_bytes(self, direction_prefix: str) -> float:
+        return sum(op.size for op in self.ops if op.res.startswith(direction_prefix))
+
+    def total_compute(self, res_name: str) -> float:
+        return sum(op.duration for op in self.ops if op.res == res_name)
+
+
+# ---------------------------------------------------------------------------
+# Live op instances & chunks (simulator-internal)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class LiveOp:
+    """An op instance bound to a worker inside a running step."""
+
+    uid: int
+    template: Op
+    worker: int
+    step_seq: int                       # per-worker step counter
+    remaining_deps: int
+    dependents: List["LiveOp"] = field(default_factory=list)
+    # HTTP/2 model state: has this stream been preempted once already?
+    serviced_once: bool = False
+    remaining_work: float = 0.0
+    start_time: float = -1.0
+    end_time: float = -1.0
+
+    @classmethod
+    def fresh(cls, template: Op, worker: int, step_seq: int,
+              resources: Dict[str, ResourceSpec]) -> "LiveOp":
+        return cls(
+            uid=next(_uid_counter),
+            template=template,
+            worker=worker,
+            step_seq=step_seq,
+            remaining_deps=len(template.deps),
+            remaining_work=template.work(resources),
+        )
+
+    @property
+    def res(self) -> str:
+        return self.template.res
+
+    @property
+    def name(self) -> str:
+        return self.template.name
+
+
+@dataclass
+class Chunk:
+    """A schedulable portion of a LiveOp (HTTP/2 WIN chunking)."""
+
+    op: LiveOp
+    remaining: float
+    is_last: bool
+
+    @property
+    def worker(self) -> int:
+        return self.op.worker
+
+    @property
+    def res(self) -> str:
+        return self.op.res
+
+
+# ---------------------------------------------------------------------------
+# Trace records
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class TraceRecord:
+    worker: int
+    res: str
+    name: str
+    step_seq: int
+    start: float
+    end: float
+
+
+@dataclass
+class Trace:
+    """Synthetic execution trace produced by the simulator."""
+
+    records: List[TraceRecord] = field(default_factory=list)
+    # (worker, step_seq) -> completion time
+    step_completions: List[Tuple[int, int, float]] = field(default_factory=list)
+
+    def add(self, worker: int, res: str, name: str, step_seq: int,
+            start: float, end: float) -> None:
+        self.records.append(TraceRecord(worker, res, name, step_seq, start, end))
+
+    def complete_step(self, worker: int, step_seq: int, t: float) -> None:
+        self.step_completions.append((worker, step_seq, t))
+
+    def throughput(self, batch_size: int, warmup_steps: int = 50) -> float:
+        """examples/s over the post-warmup window (paper §4.1).
+
+        The paper discards the first ``warmup_steps`` *per worker* to let the
+        workers drift out of their synchronized start, then time-averages.
+        """
+        if not self.step_completions:
+            return 0.0
+        per_worker: Dict[int, List[float]] = {}
+        for w, _seq, t in self.step_completions:
+            per_worker.setdefault(w, []).append(t)
+        # Use a common window: from the latest per-worker warmup boundary to
+        # the latest completion. Conservative and stable for N >= 200.
+        boundaries = []
+        ends = []
+        total = 0
+        for w, times in per_worker.items():
+            times.sort()
+            k = warmup_steps if len(times) > warmup_steps else max(1, len(times) // 2)
+            boundaries.append(times[k - 1])
+            ends.append(times[-1])
+        window_start = max(boundaries)
+        window_end = max(ends)
+        if window_end <= window_start:
+            return 0.0
+        n_in_window = sum(
+            1 for _w, _s, t in self.step_completions if window_start < t <= window_end
+        )
+        return n_in_window * batch_size / (window_end - window_start)

@@ -1,0 +1,167 @@
+"""End-to-end prediction pipeline (the paper's workflow, §4.1).
+
+    1. profile the job for ~100 steps with 1 worker (+ M PS) — here via the
+       cluster emulator, in the real system via TensorFlow traces;
+    2. calibrate the platform once: parse-overhead linear model from probes,
+       WIN from captured HTTP/2 headers (we use the platform's nominal mean,
+       as the paper does — its drift is a known error source);
+    3. preprocess recorded steps -> simulation-ready StepTemplates;
+    4. discrete-event simulate W workers for N steps; report examples/s.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import baselines as bl
+from repro.core.bandwidth import BandwidthModel, EqualShareModel
+from repro.core.events import StepTemplate, ps_resources
+from repro.core.overhead import (OverheadModel, RecordedStep,
+                                 preprocess_profile)
+from repro.core.paper_models import PAPER_DNNS, PLATFORMS, Platform
+from repro.core.simulator import SimConfig, Simulation
+from repro.emulator.cluster import (measure_throughput, probe_parse_overheads,
+                                    profile_single_worker)
+
+# Probe sizes used for the per-platform overhead calibration (Fig. 10).
+PROBE_SIZES = [2 ** i * 1e5 for i in range(10)]  # 100 KB .. 51.2 MB
+
+
+def calibrate_overhead(platform: Platform, seed: int = 0) -> OverheadModel:
+    sizes = PROBE_SIZES
+    measured = probe_parse_overheads(platform, sizes, seed=seed)
+    return OverheadModel.fit(sizes, measured)
+
+
+@dataclass
+class PredictionRun:
+    dnn: str
+    batch_size: int
+    platform: str
+    num_ps: int = 1
+    flow_control: bool = True
+    order: str = "profiled"
+    seed: int = 0
+    profile_steps: int = 100
+    sim_steps: int = 400
+    warmup_steps: int = 50
+    win_estimate: Optional[float] = None   # None -> platform nominal mean
+    bandwidth_model: Optional[BandwidthModel] = None
+
+    # filled by prepare()
+    profile: List[RecordedStep] = field(default_factory=list)
+    sim_steps_templates: List[StepTemplate] = field(default_factory=list)
+    overhead: Optional[OverheadModel] = None
+
+    def prepare(self) -> "PredictionRun":
+        plat = PLATFORMS[self.platform]
+        dnn = PAPER_DNNS[self.dnn]
+        self.overhead = calibrate_overhead(plat, seed=self.seed)
+        self.profile = profile_single_worker(
+            dnn, self.batch_size, plat, num_ps=self.num_ps,
+            steps=self.profile_steps, seed=self.seed,
+            flow_control=self.flow_control, order=self.order)
+        self.sim_steps_templates = preprocess_profile(self.profile, self.overhead)
+        return self
+
+    def _sim_cfg(self) -> SimConfig:
+        plat = PLATFORMS[self.platform]
+        if self.flow_control:
+            policy = "http2"
+        else:
+            policy = "fifo" if self.order == "profiled" else "ordered"
+        bw_model = self.bandwidth_model
+        if bw_model is None:
+            bw_model = EqualShareModel() if self.num_ps == 1 else BandwidthModel()
+        # burst-stall parameters: the fitted parse rate (Fig. 10 alpha)
+        # and the platform RTT, both part of the paper's one-time
+        # per-cluster calibration
+        alpha = self.overhead.alpha if self.overhead else 0.0
+        return SimConfig(
+            resources=ps_resources(plat.bandwidth, self.num_ps),
+            link_policy=policy,
+            win=self.win_estimate or plat.win_mu,
+            bandwidth_model=bw_model,
+            steps_per_worker=self.sim_steps,
+            warmup_steps=self.warmup_steps,
+            seed=self.seed + 7919,
+            stall_alpha=alpha if policy == "http2" else 0.0,
+            stall_rtt=plat.rtt if policy == "http2" else 0.0,
+            service_jitter=plat.noise_bandwidth,
+        )
+
+    def predict(self, num_workers: int, n_runs: int = 3) -> float:
+        """Our method's predicted examples/s for W workers.
+
+        Averages ``n_runs`` independent simulation runs (paper §3.4:
+        "multiple runs can be performed in parallel on separate cores") —
+        small-W configurations are metastable (partial interleaving,
+        Fig. 16), so a single run has high variance.
+        """
+        if not self.sim_steps_templates:
+            self.prepare()
+        outs = []
+        for i in range(n_runs):
+            cfg = self._sim_cfg()
+            cfg.seed = cfg.seed + 101 * i
+            sim = Simulation(cfg)
+            trace = sim.run(self.sim_steps_templates, num_workers)
+            outs.append(trace.throughput(self.batch_size,
+                                         self.warmup_steps))
+        return sum(outs) / len(outs)
+
+    def measure_mean(self, num_workers: int, steps: int = 150,
+                     n_runs: int = 3) -> float:
+        """Ensemble-mean ground truth (the emulator, like the real cluster,
+        is itself seed-noisy at small W)."""
+        outs = [self.measure(num_workers, steps=steps,
+                             seed_offset=1000 + 37 * i)
+                for i in range(n_runs)]
+        return sum(outs) / len(outs)
+
+    def predict_baseline(self, num_workers: int, method: str) -> float:
+        if not self.profile:
+            self.prepare()
+        phases = bl.extract_phases(self.profile)
+        if method == "lin":
+            return bl.lin_throughput(phases, num_workers, self.batch_size)
+        if method == "cynthia":
+            return bl.cynthia_throughput(phases, num_workers, self.batch_size)
+        if method == "cynthia2":
+            return bl.cynthia_throughput(phases, num_workers, self.batch_size,
+                                         halve_tc=True)
+        raise ValueError(f"unknown baseline {method!r}")
+
+    def measure(self, num_workers: int, steps: int = 100,
+                seed_offset: int = 1000) -> float:
+        """Ground truth from the cluster emulator (independent seed)."""
+        plat = PLATFORMS[self.platform]
+        dnn = PAPER_DNNS[self.dnn]
+        return measure_throughput(
+            dnn, self.batch_size, plat, num_workers, num_ps=self.num_ps,
+            steps=steps, seed=self.seed + seed_offset,
+            flow_control=self.flow_control, order=self.order,
+            warmup_steps=self.warmup_steps)
+
+
+def prediction_error(predicted: float, measured: float) -> float:
+    if measured == 0:
+        return float("inf")
+    return abs(predicted - measured) / measured
+
+
+def sweep(run: PredictionRun, workers: Sequence[int],
+          measure_steps: int = 100) -> Dict[str, List[float]]:
+    """Predicted vs measured curves (one paper sub-figure)."""
+    run.prepare()
+    pred, meas, errs = [], [], []
+    for w in workers:
+        p = run.predict(w)
+        m = run.measure(w, steps=measure_steps)
+        pred.append(p)
+        meas.append(m)
+        errs.append(prediction_error(p, m))
+    return {"workers": list(workers), "predicted": pred, "measured": meas,
+            "error": errs}

@@ -1,0 +1,3 @@
+from .pipeline import DataState, SyntheticLM
+
+__all__ = ["DataState", "SyntheticLM"]

@@ -1,0 +1,513 @@
+"""Fluid cluster emulator — the ground truth for validating predictions.
+
+Plays the role of the paper's real clusters (private CPU / AWS CPU / AWS
+GPU).  It simulates distributed PS training at a much finer granularity than
+the predictor and with dynamics the predictor does NOT observe:
+
+  * per-op lognormal compute jitter;
+  * HTTP/2 flow-control window drift (AR(1) around the platform mean) — the
+    predictor assumes a fixed estimated WIN;
+  * per-service bandwidth weight jitter and Poisson background flows (cloud
+    profiles) on each link;
+  * per-connection transmit stalls after a window-limited burst (the
+    remainder becomes eligible only after the receiver parses the burst);
+  * gRPC behavior observed in the paper: a stream is preempted at most once
+    (first service sends up to the CURRENT window; the second service runs
+    to completion);
+  * synchronized worker start with emergent de-synchronization (Fig. 15/16).
+
+It produces (a) TF-style 1-worker profiling traces — comm ops recorded with
+request-time starts and parse-end ends — and (b) measured multi-worker
+throughput.  The predictor only ever sees (a); validation compares against
+(b).  The emulator shares no scheduling code with `repro.core.simulator`.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+import random
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.overhead import RecordedOp, RecordedStep
+from repro.core.paper_models import DnnSpec, Platform
+from repro.profiling.tracer import build_job_step
+
+_seq = itertools.count()
+
+
+@dataclass
+class _Stream:
+    """One tensor transfer on a connection."""
+
+    op_idx: int
+    worker: int
+    step_seq: int
+    size: float
+    remaining: float
+    priority: float
+    serviced_once: bool = False
+    enqueue_time: float = 0.0
+
+
+@dataclass
+class _Flow:
+    """A fluid flow on a link (one active burst, or background traffic)."""
+
+    fid: int
+    weight: float
+    remaining: float            # bytes; inf for background flows
+    on_complete: Optional[Callable[[], None]] = None
+
+
+class _Link:
+    def __init__(self, bandwidth: float):
+        self.bandwidth = bandwidth
+        self.flows: Dict[int, _Flow] = {}
+
+    def total_weight(self) -> float:
+        return sum(f.weight for f in self.flows.values())
+
+    def rate_of(self, flow: _Flow) -> float:
+        tw = self.total_weight()
+        return self.bandwidth * flow.weight / tw if tw > 0 else 0.0
+
+
+class _Conn:
+    """One gRPC connection (worker, ps, direction): streams multiplexed."""
+
+    def __init__(self):
+        self.queue: Deque[_Stream] = deque()
+        self.transmitting: Optional[_Stream] = None
+        self.win_state: float = 0.0  # AR(1) state (relative deviation)
+
+
+class ClusterEmulator:
+    """Event-driven fluid emulation of W workers + M parameter servers."""
+
+    def __init__(self, dnn: DnnSpec, batch_size: int, platform: Platform,
+                 num_workers: int, num_ps: int = 1, seed: int = 0,
+                 flow_control: bool = True, order: str = "profiled",
+                 record_profile: bool = False):
+        self.dnn = dnn
+        self.batch_size = batch_size
+        self.platform = platform
+        self.W = num_workers
+        self.M = num_ps
+        self.rng = random.Random(seed)
+        self.flow_control = flow_control
+        self.order = order
+        self.record_profile = record_profile
+
+        # the ideal (noise-free) step DAG; per-step execution jitters it
+        self.template = build_job_step(dnn, batch_size, platform,
+                                       num_ps=num_ps, order=order, seed=seed)
+        self.ops = self.template.ops
+
+        # event machinery
+        self.t = 0.0
+        self.timers: List[Tuple[float, int, Callable[[], None]]] = []
+        self.links: Dict[str, _Link] = {}
+        self.conns: Dict[Tuple[int, str], _Conn] = {}
+        for p in range(num_ps):
+            for direction in ("downlink", "uplink"):
+                lid = direction if num_ps == 1 else f"{direction}:{p}"
+                self.links[lid] = _Link(platform.bandwidth)
+                for w in range(num_workers):
+                    self.conns[(w, lid)] = _Conn()
+
+        # per-worker execution state
+        self.worker_busy = [False] * num_workers       # compute unit
+        self.worker_q: List[Deque[Tuple[int, int]]] = [deque() for _ in range(num_workers)]
+        self.parse_busy = [False] * num_workers        # recv/parse thread
+        self.parse_q: List[Deque[Tuple[int, int, float, str]]] = [deque() for _ in range(num_workers)]
+        # per (worker, ps) server-side thread at PS: parse + update FIFO
+        self.ps_busy: Dict[Tuple[int, int], bool] = {}
+        self.ps_q: Dict[Tuple[int, int], Deque[Tuple[str, int, int, float]]] = {}
+        for w in range(num_workers):
+            for p in range(num_ps):
+                self.ps_busy[(w, p)] = False
+                self.ps_q[(w, p)] = deque()
+
+        self.remaining_deps: List[List[int]] = [[] for _ in range(num_workers)]
+        self.pending_ops = [0] * num_workers
+        self.completed_steps = [0] * num_workers
+        self.steps_target = 0
+        self.step_start_time = [0.0] * num_workers
+        self.step_completion_times: List[Tuple[int, int, float]] = []
+
+        # profiling records (1-worker mode)
+        self.current_records: List[List[Optional[RecordedOp]]] = [
+            [] for _ in range(num_workers)
+        ]
+        self.profiled_steps: List[RecordedStep] = []
+
+        # background traffic
+        if platform.bg_rate > 0:
+            for lid in self.links:
+                self._schedule_bg_arrival(lid)
+
+    # ------------------------------------------------------------------ utils
+
+    def _timer(self, dt: float, cb: Callable[[], None]) -> None:
+        heapq.heappush(self.timers, (self.t + max(dt, 0.0), next(_seq), cb))
+
+    def _lognorm(self, sigma: float) -> float:
+        if sigma <= 0:
+            return 1.0
+        mu = -0.5 * sigma * sigma  # mean 1.0
+        return math.exp(self.rng.gauss(mu, sigma))
+
+    def _draw_win(self, conn: _Conn) -> float:
+        p = self.platform
+        if p.win_sigma <= 0:
+            return p.win_mu
+        rho = 0.95
+        conn.win_state = rho * conn.win_state + self.rng.gauss(0.0, p.win_sigma)
+        return max(1e5, p.win_mu * (1.0 + conn.win_state))
+
+    # ------------------------------------------------------ background flows
+
+    def _schedule_bg_arrival(self, lid: str) -> None:
+        p = self.platform
+        dt = self.rng.expovariate(p.bg_rate)
+        self._timer(dt, lambda: self._bg_arrive(lid))
+
+    def _bg_arrive(self, lid: str) -> None:
+        p = self.platform
+        flow = _Flow(fid=next(_seq), weight=1.0, remaining=math.inf)
+        self.links[lid].flows[flow.fid] = flow
+        dur = self.rng.expovariate(1.0 / p.bg_mean_duration)
+        self._timer(dur, lambda: self._bg_depart(lid, flow.fid))
+        self._schedule_bg_arrival(lid)
+
+    def _bg_depart(self, lid: str, fid: int) -> None:
+        self.links[lid].flows.pop(fid, None)
+
+    # --------------------------------------------------------- op lifecycle
+
+    def _op_ready(self, w: int, op_idx: int) -> None:
+        op = self.ops[op_idx]
+        res = op.res
+        if res.startswith(("downlink", "uplink")):
+            stream = _Stream(op_idx=op_idx, worker=w,
+                             step_seq=self.completed_steps[w],
+                             size=op.size, remaining=op.size,
+                             priority=op.priority, enqueue_time=self.t)
+            if self.record_profile:
+                rec = self.current_records[w][op_idx]
+                rec.start = self.t
+            conn = self.conns[(w, res)]
+            self._conn_enqueue(conn, stream, res)
+        elif res == "worker":
+            self.worker_q[w].append((op_idx, self.completed_steps[w]))
+            self._worker_kick(w)
+        elif res.startswith("ps"):
+            p = 0 if res == "ps" else int(res.split(":")[1])
+            dur = (op.end - op.start) * self._lognorm(self.platform.noise_compute)
+            self.ps_q[(w, p)].append(("update", op_idx, self.completed_steps[w], dur))
+            self._ps_kick(w, p)
+        else:
+            raise ValueError(f"unexpected resource {res}")
+
+    def _op_done(self, w: int, op_idx: int) -> None:
+        if self.record_profile:
+            rec = self.current_records[w][op_idx]
+            rec.end = self.t
+        self.pending_ops[w] -= 1
+        for j in self._dependents[op_idx]:
+            self.remaining_deps[w][j] -= 1
+            if self.remaining_deps[w][j] == 0:
+                self._op_ready(w, j)
+        if self.pending_ops[w] == 0:
+            self._step_done(w)
+
+    # ------------------------------------------------------- worker compute
+
+    def _worker_kick(self, w: int) -> None:
+        if self.worker_busy[w] or not self.worker_q[w]:
+            return
+        op_idx, _seq_ = self.worker_q[w].popleft()
+        op = self.ops[op_idx]
+        self.worker_busy[w] = True
+        dur = (op.end - op.start) * self._lognorm(self.platform.noise_compute)
+        if self.record_profile:
+            self.current_records[w][op_idx].start = self.t
+
+        def done():
+            self.worker_busy[w] = False
+            self._op_done(w, op_idx)
+            self._worker_kick(w)
+
+        self._timer(dur, done)
+
+    # --------------------------------------------------------- parse threads
+
+    def _worker_parse_enqueue(self, w: int, op_idx: int, size: float) -> None:
+        self.parse_q[w].append((op_idx, self.completed_steps[w], size, ""))
+        self._parse_kick(w)
+
+    def _parse_kick(self, w: int) -> None:
+        if self.parse_busy[w] or not self.parse_q[w]:
+            return
+        op_idx, _s, size, _ = self.parse_q[w].popleft()
+        self.parse_busy[w] = True
+        p = self.platform
+        dur = (p.overhead_alpha * size + p.overhead_beta) * self._lognorm(
+            p.noise_compute)
+
+        def done():
+            self.parse_busy[w] = False
+            self._op_done(w, op_idx)
+            self._parse_kick(w)
+
+        self._timer(dur, done)
+
+    def _ps_kick(self, w: int, p: int) -> None:
+        if self.ps_busy[(w, p)] or not self.ps_q[(w, p)]:
+            return
+        kind, op_idx, _s, dur = self.ps_q[(w, p)].popleft()
+        if kind == "update" and self.record_profile:
+            # record actual execution start (request time is irrelevant for
+            # PS compute ops; TF traces report the executed interval)
+            self.current_records[w][op_idx].start = self.t
+
+        def done():
+            self.ps_busy[(w, p)] = False
+            self._op_done(w, op_idx)
+            self._ps_kick(w, p)
+
+        self.ps_busy[(w, p)] = True
+        self._timer(dur, done)
+
+    # ----------------------------------------------------------- connections
+
+    def _conn_enqueue(self, conn: _Conn, stream: _Stream, lid: str) -> None:
+        if self.flow_control or self.order == "profiled":
+            conn.queue.append(stream)
+        else:
+            # enforced order: insert by priority (stable)
+            q = list(conn.queue)
+            q.append(stream)
+            q.sort(key=lambda s: s.priority)
+            conn.queue = deque(q)
+        self._conn_kick(conn, lid)
+
+    def _conn_kick(self, conn: _Conn, lid: str) -> None:
+        if conn.transmitting is not None or not conn.queue:
+            return
+        stream = conn.queue.popleft()
+        conn.transmitting = stream
+        p = self.platform
+        if self.flow_control and not stream.serviced_once:
+            win = self._draw_win(conn)
+            burst = min(stream.remaining, win)
+            preempt = stream.remaining > win
+        else:
+            burst = stream.remaining
+            preempt = False
+        weight = self._lognorm(p.noise_bandwidth)
+        flow = _Flow(fid=next(_seq), weight=weight, remaining=burst)
+
+        def burst_done():
+            stream.remaining -= burst
+            conn.transmitting = None
+            if preempt:
+                stream.serviced_once = True
+                # remainder eligible after the receiver parses this burst
+                stall = p.overhead_alpha * burst + p.rtt
+
+                def rejoin():
+                    conn.queue.append(stream)
+                    self._conn_kick(conn, lid)
+
+                self._timer(stall, rejoin)
+            else:
+                self._stream_complete(stream, lid)
+            self._conn_kick(conn, lid)
+
+        flow.on_complete = burst_done
+        self.links[lid].flows[flow.fid] = flow
+
+    def _stream_complete(self, stream: _Stream, lid: str) -> None:
+        w = stream.worker
+        op_idx = stream.op_idx
+        if lid.startswith("downlink"):
+            # parse on the worker's recv thread, then op is done
+            self._worker_parse_enqueue(w, op_idx, stream.size)
+        else:
+            # parse on the per-worker server thread at this PS
+            p = 0 if lid == "uplink" else int(lid.split(":")[1])
+            plat = self.platform
+            dur = (plat.overhead_alpha * stream.size + plat.overhead_beta) \
+                * self._lognorm(plat.noise_compute)
+            self.ps_q[(w, p)].append(("parse", op_idx, stream.step_seq, dur))
+            self._ps_kick(w, p)
+
+    # -------------------------------------------------------- step lifecycle
+
+    def _start_step(self, w: int) -> None:
+        n = len(self.ops)
+        self.remaining_deps[w] = [len(op.deps) for op in self.ops]
+        self.pending_ops[w] = n
+        self.step_start_time[w] = self.t
+        if self.record_profile:
+            self.current_records[w] = [
+                RecordedOp(name=op.name, res=op.res, deps=op.deps,
+                           size=op.size, start=self.t, end=self.t,
+                           priority=op.priority, tags=dict(op.tags))
+                for op in self.ops
+            ]
+        for i, op in enumerate(self.ops):
+            if not op.deps:
+                self._op_ready(w, i)
+
+    def _step_done(self, w: int) -> None:
+        self.completed_steps[w] += 1
+        self.step_completion_times.append(
+            (w, self.completed_steps[w] - 1, self.t))
+        if self.record_profile:
+            self.profiled_steps.append(
+                RecordedStep(ops=list(self.current_records[w]),
+                             meta=dict(self.template.meta)))
+        if self.completed_steps[w] < self.steps_target:
+            self._start_step(w)
+
+    # ------------------------------------------------------------- main loop
+
+    def run(self, steps_per_worker: int = 100,
+            horizon: float = 1e7) -> None:
+        # cache dependents once
+        self._dependents: List[List[int]] = [[] for _ in self.ops]
+        for i, op in enumerate(self.ops):
+            for d in op.deps:
+                self._dependents[d].append(i)
+
+        self.steps_target = steps_per_worker
+        for w in range(self.W):
+            self._start_step(w)
+
+        guard = 0
+        max_events = 2000 * steps_per_worker * self.W * max(1, len(self.ops))
+        last_t = self.t
+        while self.t < horizon:
+            guard += 1
+            if guard > max_events:
+                raise RuntimeError("emulator event guard tripped")
+            if all(c >= self.steps_target for c in self.completed_steps):
+                break
+
+            # advance fluid flows to now-pending event time
+            t_fluid, fluid_link, fluid_flow = self._next_fluid()
+            t_timer = self.timers[0][0] if self.timers else math.inf
+            t_next = min(t_fluid, t_timer)
+            if not math.isfinite(t_next):
+                break  # nothing left to do
+
+            self._advance_fluid(t_next - self.t)
+            self.t = t_next
+
+            if t_fluid <= t_timer and fluid_flow is not None:
+                link = self.links[fluid_link]
+                link.flows.pop(fluid_flow.fid, None)
+                if fluid_flow.on_complete:
+                    fluid_flow.on_complete()
+            else:
+                _, _, cb = heapq.heappop(self.timers)
+                cb()
+
+    def _next_fluid(self) -> Tuple[float, str, Optional[_Flow]]:
+        best_t, best_lid, best_flow = math.inf, "", None
+        for lid, link in self.links.items():
+            tw = link.total_weight()
+            if tw <= 0:
+                continue
+            for flow in link.flows.values():
+                if not math.isfinite(flow.remaining):
+                    continue
+                rate = link.bandwidth * flow.weight / tw
+                if rate <= 0:
+                    continue
+                tf = self.t + flow.remaining / rate
+                if tf < best_t:
+                    best_t, best_lid, best_flow = tf, lid, flow
+        return best_t, best_lid, best_flow
+
+    def _advance_fluid(self, dt: float) -> None:
+        if dt <= 0:
+            return
+        for link in self.links.values():
+            tw = link.total_weight()
+            if tw <= 0:
+                continue
+            for flow in link.flows.values():
+                if math.isfinite(flow.remaining):
+                    rate = link.bandwidth * flow.weight / tw
+                    flow.remaining = max(0.0, flow.remaining - rate * dt)
+
+    # ------------------------------------------------------------ public API
+
+    def throughput(self, warmup_steps: int = 50) -> float:
+        """Measured examples/s (paper §4.1: average after warmup window)."""
+        per_worker: Dict[int, List[float]] = {}
+        for w, _s, t in self.step_completion_times:
+            per_worker.setdefault(w, []).append(t)
+        if not per_worker:
+            return 0.0
+        boundaries, ends = [], []
+        for times in per_worker.values():
+            times.sort()
+            k = warmup_steps if len(times) > warmup_steps else max(1, len(times) // 2)
+            boundaries.append(times[k - 1])
+            ends.append(times[-1])
+        w0, w1 = max(boundaries), max(ends)
+        if w1 <= w0:
+            return 0.0
+        n = sum(1 for _w, _s, t in self.step_completion_times if w0 < t <= w1)
+        return n * self.batch_size / (w1 - w0)
+
+
+# ---------------------------------------------------------------------------
+# High-level helpers
+# ---------------------------------------------------------------------------
+
+
+def profile_single_worker(dnn: DnnSpec, batch_size: int, platform: Platform,
+                          num_ps: int = 1, steps: int = 100, seed: int = 0,
+                          flow_control: bool = True,
+                          order: str = "profiled") -> List[RecordedStep]:
+    """Paper §2: profile 100 steps with 1 PS (or M PS) and 1 worker."""
+    emu = ClusterEmulator(dnn, batch_size, platform, num_workers=1,
+                          num_ps=num_ps, seed=seed, flow_control=flow_control,
+                          order=order, record_profile=True)
+    emu.run(steps_per_worker=steps)
+    # drop the first 2 steps (TF session warmup; stabilizes recorded times)
+    return emu.profiled_steps[2:] if len(emu.profiled_steps) > 4 else emu.profiled_steps
+
+
+def measure_throughput(dnn: DnnSpec, batch_size: int, platform: Platform,
+                       num_workers: int, num_ps: int = 1, steps: int = 100,
+                       seed: int = 0, flow_control: bool = True,
+                       order: str = "profiled",
+                       warmup_steps: int = 50) -> float:
+    """Ground-truth measurement (the paper's 'real cluster' datapoint)."""
+    emu = ClusterEmulator(dnn, batch_size, platform, num_workers=num_workers,
+                          num_ps=num_ps, seed=seed, flow_control=flow_control,
+                          order=order)
+    emu.run(steps_per_worker=steps)
+    return emu.throughput(warmup_steps=warmup_steps)
+
+
+def probe_parse_overheads(platform: Platform, sizes: Sequence[float],
+                          seed: int = 0) -> List[float]:
+    """Microbenchmark of receiver parse cost vs size (Fig. 10 data)."""
+    rng = random.Random(seed)
+    out = []
+    for s in sizes:
+        sigma = platform.noise_compute
+        mu = -0.5 * sigma * sigma
+        jit = math.exp(rng.gauss(mu, sigma)) if sigma > 0 else 1.0
+        out.append((platform.overhead_alpha * s + platform.overhead_beta) * jit)
+    return out

@@ -1,0 +1,95 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On this CPU container the kernels always run in ``interpret=True`` mode
+(the kernel body executes in Python for correctness validation); on a real
+TPU runtime set ``REPRO_PALLAS_INTERPRET=0`` to compile with Mosaic.
+
+Both ops carry custom VJPs that fall back to the jnp reference for the
+backward pass (the paper's contribution is systems-level; fused backward
+kernels are an optimization noted in EXPERIMENTS.md, not required for
+correctness).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention_fwd
+from .rglru_scan import rglru_scan_fwd
+
+
+def _interpret() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0):
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               interpret=_interpret())
+
+
+def _fa_fwd(q, k, v, causal, window):
+    return flash_attention(q, k, v, causal, window), (q, k, v)
+
+
+def _fa_bwd(causal, window, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q, k, v: ref.flash_attention_ref(q, k, v, causal=causal,
+                                                window=window), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU scan
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def rglru_scan(a, b):
+    """h_t = a_t h_{t-1} + b_t over axis -2; a, b: (..., S, R)."""
+    shape = a.shape
+    a2 = a.reshape((-1,) + shape[-2:])
+    b2 = b.reshape((-1,) + shape[-2:])
+    h = rglru_scan_fwd(a2, b2, interpret=_interpret())
+    return h.reshape(shape)
+
+
+def _rg_fwd(a, b):
+    h = rglru_scan(a, b)
+    return h, (a, h)
+
+
+def _rg_bwd(res, g):
+    a, h = res
+    # reverse-time adjoint of the linear recurrence:
+    #   lam_t = g_t + a_{t+1} * lam_{t+1};  db = lam;  da_t = lam_t * h_{t-1}
+    a_next = jnp.concatenate(
+        [a[..., 1:, :], jnp.zeros_like(a[..., :1, :])], axis=-2)
+
+    def comb(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    lam_rev = jax.lax.associative_scan(
+        comb, (jnp.flip(a_next, axis=-2), jnp.flip(g, axis=-2)), axis=-2)[1]
+    lam = jnp.flip(lam_rev, axis=-2)
+    h_prev = jnp.concatenate(
+        [jnp.zeros_like(h[..., :1, :]), h[..., :-1, :]], axis=-2)
+    return lam * h_prev, lam
+
+
+rglru_scan.defvjp(_rg_fwd, _rg_bwd)

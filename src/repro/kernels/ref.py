@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the Pallas kernels (correctness ground truth)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True,
+                        window: int = 0) -> jnp.ndarray:
+    """Naive attention. q: (B,S,H,D); k,v: (B,T,Kv,D); GQA by head grouping.
+
+    Returns (B,S,H,D) in q.dtype; softmax in fp32.
+    """
+    b, s, h, d = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, kf) / math.sqrt(d)
+    if causal:
+        qi = jnp.arange(s)[:, None] + (t - s)   # right-aligned positions
+        ki = jnp.arange(t)[None, :]
+        m = ki <= qi
+        if window > 0:
+            m &= ki > qi - window
+        logits = jnp.where(m[None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, vf)
+    return out.reshape(b, s, h, d).astype(q.dtype)
+
+
+def rglru_scan_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Linear recurrence h_t = a_t * h_{t-1} + b_t (zero init).
+
+    a, b: (..., S, R) fp32. Returns h: (..., S, R).
+    """
+    def comb(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(comb, (a, b), axis=-2)
+    return h

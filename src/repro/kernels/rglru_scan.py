@@ -1,0 +1,65 @@
+"""Pallas TPU kernel for the RG-LRU linear recurrence (chunked scan).
+
+Computes h_t = a_t * h_{t-1} + b_t (zero initial state) over the sequence
+axis with explicit VMEM tiling:
+
+  grid = (batch, R // block_r, S // block_s)   [sequence chunks innermost]
+
+The recurrence carry ``h`` lives in VMEM scratch and is threaded across
+sequence-chunk grid steps (TPU grids execute sequentially); it is reset at
+chunk 0 of every (batch, r-block) pair.  Inside a chunk, a ``fori_loop``
+steps the (block_r,)-wide recurrence — elementwise VPU work on lanes that
+stay resident in VMEM, i.e. the HBM traffic is exactly one read of (a, b)
+and one write of h.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, b_ref, o_ref, h_scr, *, block_s: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    a = a_ref[0].astype(jnp.float32)   # (block_s, block_r)
+    b = b_ref[0].astype(jnp.float32)
+
+    def step(t, h):
+        h = a[t] * h + b[t]
+        o_ref[0, t, :] = h.astype(o_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, block_s, step, h_scr[...])
+    h_scr[...] = h
+
+
+def rglru_scan_fwd(a: jnp.ndarray, b: jnp.ndarray, block_s: int = 256,
+                   block_r: int = 128, interpret: bool = True) -> jnp.ndarray:
+    """a, b: (B, S, R) -> h: (B, S, R) (same dtype as b)."""
+    bsz, s, r = a.shape
+    bs = min(block_s, s)
+    br = min(block_r, r)
+    if s % bs or r % br:
+        raise ValueError(f"(S={s}, R={r}) must divide blocks ({bs},{br})")
+    grid = (bsz, r // br, s // bs)
+    kernel = functools.partial(_rglru_kernel, block_s=bs)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bs, br), lambda ib, ir, ic: (ib, ic, ir)),
+            pl.BlockSpec((1, bs, br), lambda ib, ir, ic: (ib, ic, ir)),
+        ],
+        out_specs=pl.BlockSpec((1, bs, br), lambda ib, ir, ic: (ib, ic, ir)),
+        out_shape=jax.ShapeDtypeStruct((bsz, s, r), b.dtype),
+        scratch_shapes=[pltpu.VMEM((br,), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

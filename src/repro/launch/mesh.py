@@ -1,0 +1,21 @@
+"""Production meshes (defined as functions: importing never touches jax
+device state).
+
+Single pod: (data=16, model=16)  = 256 chips (TPU v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis rides
+DCN, ``data``/``model`` ride ICI.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(shape=(1, 1), axes=("data", "model")):
+    """Tiny mesh over however many devices exist (tests on 1 CPU)."""
+    return jax.make_mesh(shape, axes)

@@ -1,0 +1,69 @@
+"""What-if analysis: the paper's technique as a deployment tool on TPU.
+
+The paper's original use-case (§1, §6 [10]) is letting a *scheduler* predict
+throughput for configurations it never ran.  Here the same DES predicts TPU
+step time for deployment questions the dry-run alone cannot answer:
+
+    PYTHONPATH=src python -m repro.launch.whatif --arch granite-8b \
+        --pods 1 2 4 8 --straggler 1.3 --compress 0.25
+
+  * scale-out: step time at 1..N pods (DCN all-reduce per layer);
+  * straggler: one pod's compute slowed by a factor — the DES shows how
+    much of it the collective overlap hides;
+  * gradient compression: DCN bytes scaled by the compression ratio
+    (int8 = 0.25 of fp32, topk(1%) ~ 0.02);
+  * chunked collectives (--win bytes): the paper's HTTP/2 WIN model mapped
+    to collective chunking — smaller chunks interleave with compute
+    earlier at the cost of per-chunk latency.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.core.tpu_adapter import (MeshFactors, build_step_dag,
+                                    predict_step_time)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="granite-8b")
+    ap.add_argument("--shape", choices=list(SHAPES), default="train_4k")
+    ap.add_argument("--pods", type=int, nargs="+", default=[1, 2, 4])
+    ap.add_argument("--straggler", type=float, default=1.0)
+    ap.add_argument("--compress", type=float, default=1.0,
+                    help="DCN byte multiplier (int8=0.25 of fp32)")
+    ap.add_argument("--win", type=float, default=0.0,
+                    help="collective chunk bytes (0 = unchunked)")
+    ap.add_argument("--mfu", type=float, default=0.5)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    sp = SHAPES[args.shape]
+    print(f"{'pods':>5s} {'chips':>6s} {'step_time':>10s} {'rel_tput':>9s} "
+          f"{'straggler':>10s} {'compressed':>11s}")
+    base = None
+    for pods in args.pods:
+        mesh = MeshFactors(pods=pods, mfu=args.mfu)
+        tokens = sp.global_batch * sp.seq_len
+        dag = build_step_dag(cfg, mesh, tokens)
+        t = predict_step_time(dag, num_pods=pods, win_bytes=args.win)
+        if base is None:
+            base = t * mesh.chips
+        rel = (base / (t * mesh.chips))
+        t_st = predict_step_time(dag, num_pods=pods,
+                                 straggler_factor=args.straggler,
+                                 win_bytes=args.win) \
+            if args.straggler != 1.0 else t
+        if args.compress != 1.0 and pods > 1:
+            dag_c = build_step_dag(cfg, mesh, tokens,
+                                   compressed_dcn=args.compress)
+            t_c = predict_step_time(dag_c, num_pods=pods, win_bytes=args.win)
+        else:
+            t_c = t
+        print(f"{pods:5d} {mesh.chips:6d} {t*1e3:9.1f}ms {rel:7.2f}x "
+              f"{t_st*1e3:9.1f}ms {t_c*1e3:10.1f}ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+from .config import ModelConfig, MoEConfig
+from .transformer import (active_param_count, forward, init_decode_state,
+                          init_params, loss_fn, param_count, param_shapes,
+                          precompute_cross_kv, serve_step)
+
+__all__ = ["ModelConfig", "MoEConfig", "forward", "loss_fn", "init_params",
+           "param_shapes", "param_count", "active_param_count",
+           "init_decode_state", "serve_step", "precompute_cross_kv"]

@@ -1,0 +1,90 @@
+"""Asynchronous-SGD semantics (the paper's training mode) in JAX.
+
+The paper predicts the *throughput* of parameter-server async SGD; this
+module implements its *semantics* so the framework can actually train in
+that mode.  On TPU pods the SPMD collectives are synchronous by
+construction, so asynchrony appears at two levels:
+
+1. **Staleness-tau simulation** (:class:`AsyncSGDState`): the global model
+   is updated with gradients computed ``tau`` steps ago — exactly what a
+   PS worker does when W workers interleave (expected staleness W-1).
+   Validated on CPU; used by tests and the convergence benchmark.
+
+2. **Async pod boundary** (:func:`outer_apply`): DiLoCo-style deployment —
+   synchronous SPMD *within* a pod, asynchronous PS-style outer updates
+   *across* pods over DCN, with optional staleness-aware scaling
+   (1 / (1 + staleness)) to damp stale outer gradients.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .optimizers import Optimizer
+
+Params = Any
+
+
+@dataclass
+class AsyncSGDState:
+    """Global model + a ring buffer of in-flight (delayed) gradients."""
+
+    params: Params
+    opt_state: Any
+    buffer: Any          # pytree stacked on axis 0, length = staleness
+    step: int
+
+
+def async_init(params, optimizer: Optimizer, staleness: int) -> AsyncSGDState:
+    buf = jax.tree_util.tree_map(
+        lambda p: jnp.zeros((max(staleness, 0),) + p.shape, p.dtype), params)
+    return AsyncSGDState(params=params, opt_state=optimizer.init(params),
+                         buffer=buf, step=0)
+
+
+def async_step(state: AsyncSGDState, grads, optimizer: Optimizer,
+               staleness: int, scale_by_staleness: bool = False
+               ) -> AsyncSGDState:
+    """Submit fresh ``grads``; apply the gradient submitted ``staleness``
+    steps ago (zero-filled during warmup, as with real PS ramp-up)."""
+    if staleness == 0:
+        applied = grads
+        buf = state.buffer
+    else:
+        applied = jax.tree_util.tree_map(lambda b: b[0], state.buffer)
+        buf = jax.tree_util.tree_map(
+            lambda b, g: jnp.concatenate([b[1:], g[None].astype(b.dtype)]),
+            state.buffer, grads)
+    if scale_by_staleness and staleness > 0:
+        s = 1.0 / (1.0 + staleness)
+        applied = jax.tree_util.tree_map(lambda g: g * s, applied)
+    new_params, new_opt = optimizer.update(applied, state.opt_state,
+                                           state.params)
+    return AsyncSGDState(params=new_params, opt_state=new_opt, buffer=buf,
+                         step=state.step + 1)
+
+
+# ---------------------------------------------------------------------------
+# Async pod boundary (outer optimizer over DCN)
+# ---------------------------------------------------------------------------
+
+
+def outer_apply(global_params: Params, pod_params: Params,
+                outer_lr: float = 0.7, staleness: int = 0,
+                scale_by_staleness: bool = True) -> Params:
+    """PS-style outer update: the pod pushes (global - pod) as an outer
+    gradient; stale deltas are damped by 1/(1+staleness)."""
+    scale = outer_lr
+    if scale_by_staleness and staleness > 0:
+        scale = outer_lr / (1.0 + staleness)
+    return jax.tree_util.tree_map(
+        lambda gp, pp: gp - scale * (gp - pp).astype(gp.dtype),
+        global_params, pod_params)
+
+
+def sync_step(params, opt_state, grads, optimizer: Optimizer):
+    """Synchronous baseline (the paper's comparison point)."""
+    return optimizer.update(grads, opt_state, params)

@@ -1,0 +1,111 @@
+"""Gradient compression for DCN-bound (cross-pod) reductions.
+
+Two schemes, both with error feedback (the residual of the quantization
+is added back into the next step's gradient so compression error does not
+accumulate as bias):
+
+* ``int8``  — per-tensor symmetric int8 quantization (4x over fp32, 2x
+  over bf16 on the wire);
+* ``topk``  — magnitude top-k sparsification (k as a fraction), dense
+  residual carried in the error buffer.
+
+API mirrors an optimizer: ``init(params) -> state``;
+``compress(grads, state) -> (payload, state)``; ``decompress(payload)``.
+The payload is what crosses DCN; ``wire_bytes(payload)`` feeds the
+collective term of the roofline model.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def _tm(f, *t, **kw):
+    return jax.tree_util.tree_map(f, *t, **kw)
+
+
+class Int8Compressor:
+    name = "int8"
+
+    def init(self, params) -> Params:
+        return _tm(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def compress(self, grads, err) -> Tuple[Any, Params]:
+        def one(g, e):
+            gf = g.astype(jnp.float32) + e
+            scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+            q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+            new_e = gf - q.astype(jnp.float32) * scale
+            return {"q": q, "scale": scale}, new_e
+
+        flat = _tm(one, grads, err)
+        payload = _tm(lambda t2: t2[0], flat,
+                      is_leaf=lambda x: isinstance(x, tuple))
+        new_err = _tm(lambda t2: t2[1], flat,
+                      is_leaf=lambda x: isinstance(x, tuple))
+        return payload, new_err
+
+    def decompress(self, payload):
+        return _tm(lambda p: p["q"].astype(jnp.float32) * p["scale"],
+                   payload, is_leaf=lambda x: isinstance(x, dict)
+                   and "q" in x)
+
+    def wire_bytes(self, payload) -> int:
+        return sum(l.size * l.dtype.itemsize
+                   for l in jax.tree_util.tree_leaves(payload))
+
+
+class TopKCompressor:
+    name = "topk"
+
+    def __init__(self, fraction: float = 0.01):
+        self.fraction = fraction
+
+    def init(self, params):
+        return _tm(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def compress(self, grads, err):
+        def one(g, e):
+            gf = g.astype(jnp.float32) + e
+            flat = gf.reshape(-1)
+            k = max(int(flat.size * self.fraction), 1)
+            vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+            sel = flat[idx]
+            new_e = flat.at[idx].set(0.0).reshape(gf.shape)
+            return {"idx": idx.astype(jnp.int32), "val": sel,
+                    "shape": gf.shape}, new_e
+
+        flat = _tm(one, grads, err)
+        payload = _tm(lambda t2: t2[0], flat,
+                      is_leaf=lambda x: isinstance(x, tuple))
+        new_err = _tm(lambda t2: t2[1], flat,
+                      is_leaf=lambda x: isinstance(x, tuple))
+        return payload, new_err
+
+    def decompress(self, payload):
+        def one(p):
+            out = jnp.zeros(int(jnp.prod(jnp.array(p["shape"]))), jnp.float32)
+            out = out.at[p["idx"]].set(p["val"])
+            return out.reshape(p["shape"])
+
+        return _tm(one, payload, is_leaf=lambda x: isinstance(x, dict)
+                   and "idx" in x)
+
+    def wire_bytes(self, payload) -> int:
+        total = 0
+        for l in jax.tree_util.tree_leaves(payload):
+            if hasattr(l, "dtype"):
+                total += l.size * l.dtype.itemsize
+        return total
+
+
+def make_compressor(name: str, **kw):
+    if name == "int8":
+        return Int8Compressor()
+    if name == "topk":
+        return TopKCompressor(**kw)
+    raise KeyError(f"unknown compressor {name!r}")

@@ -1,0 +1,177 @@
+"""Optimizers (self-contained; no optax dependency).
+
+``make_optimizer(name, lr)`` -> :class:`Optimizer` with the familiar
+``init(params) -> state`` / ``update(grads, state, params) ->
+(new_params, new_state)`` API.  All states are pytrees (checkpointable,
+shardable with the same rules as the parameters they mirror).
+
+``adamw_bf16`` stores moments in bfloat16 (halves optimizer HBM for the
+>=90B-param archs); ``adafactor`` stores a factored second moment only
+(Arctic-480B fits 16 GB/chip with it at 256-way sharding).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Params], Any]
+    update: Callable[[Params, Any, Params], Tuple[Params, Any]]
+
+
+def _tree_map(f, *ts, **kw):
+    return jax.tree_util.tree_map(f, *ts, **kw)
+
+
+def _cast_like(x, ref):
+    return x.astype(ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+
+
+def sgd(lr: float = 1e-2) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        new = _tree_map(lambda p, g: p - lr * g.astype(p.dtype),
+                        params, grads)
+        return new, {"step": state["step"] + 1}
+
+    return Optimizer("sgd", init, update)
+
+
+def momentum(lr: float = 1e-2, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "mu": _tree_map(jnp.zeros_like, params)}
+
+    def update(grads, state, params):
+        mu = _tree_map(lambda m, g: beta * m + g.astype(m.dtype),
+                       state["mu"], grads)
+        new = _tree_map(lambda p, m: p - lr * m.astype(p.dtype), params, mu)
+        return new, {"step": state["step"] + 1, "mu": mu}
+
+    return Optimizer("momentum", init, update)
+
+
+def _adam_family(lr, b1, b2, eps, weight_decay, moment_dtype,
+                 name) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, moment_dtype or p.dtype)
+        return {"step": jnp.zeros((), jnp.int32),
+                "mu": _tree_map(zeros, params),
+                "nu": _tree_map(zeros, params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            vf = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(gf)
+            upd = (mf / bc1) / (jnp.sqrt(vf / bc2) + eps)
+            if weight_decay:
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            newp = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+            return newp, mf.astype(m.dtype), vf.astype(v.dtype)
+
+        flat = _tree_map(upd, params, grads, state["mu"], state["nu"])
+        new = _tree_map(lambda t3: t3[0], flat,
+                        is_leaf=lambda x: isinstance(x, tuple))
+        mu = _tree_map(lambda t3: t3[1], flat,
+                       is_leaf=lambda x: isinstance(x, tuple))
+        nu = _tree_map(lambda t3: t3[2], flat,
+                       is_leaf=lambda x: isinstance(x, tuple))
+        return new, {"step": step, "mu": mu, "nu": nu}
+
+    return Optimizer(name, init, update)
+
+
+def adam(lr=1e-3, b1=0.9, b2=0.999, eps=1e-8) -> Optimizer:
+    return _adam_family(lr, b1, b2, eps, 0.0, None, "adam")
+
+
+def adamw(lr=1e-3, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1) -> Optimizer:
+    return _adam_family(lr, b1, b2, eps, weight_decay, None, "adamw")
+
+
+def adamw_bf16(lr=1e-3, b1=0.9, b2=0.95, eps=1e-8,
+               weight_decay=0.1) -> Optimizer:
+    return _adam_family(lr, b1, b2, eps, weight_decay, jnp.bfloat16,
+                        "adamw_bf16")
+
+
+def adafactor(lr=1e-2, decay=0.8, eps=1e-30, clip=1.0) -> Optimizer:
+    """Factored second-moment only (no first moment): O(n+m) state for an
+    (n, m) matrix instead of O(nm) — the fit-in-HBM choice for Arctic."""
+
+    def init(params):
+        def zeros(p):
+            if p.ndim >= 2:
+                return {"row": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "col": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                         jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"step": jnp.zeros((), jnp.int32),
+                "v": _tree_map(zeros, params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)
+
+        def upd(p, g, v):
+            gf = g.astype(jnp.float32)
+            g2 = jnp.square(gf) + eps
+            if p.ndim >= 2:
+                row = beta * v["row"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                col = beta * v["col"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rmean = jnp.mean(row, axis=-1, keepdims=True)
+                vhat = (row / jnp.maximum(rmean, eps))[..., None] \
+                    * col[..., None, :]
+                newv = {"row": row, "col": col}
+            else:
+                vhat = beta * v["v"] + (1 - beta) * g2
+                newv = {"v": vhat}
+            u = gf * jax.lax.rsqrt(jnp.maximum(vhat, eps))
+            # update clipping (Shazeer & Stern)
+            norm = jnp.sqrt(jnp.mean(jnp.square(u)))
+            u = u / jnp.maximum(1.0, norm / clip)
+            newp = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+            return newp, newv
+
+        flat = _tree_map(upd, params, grads, state["v"])
+        new = _tree_map(lambda t2: t2[0], flat,
+                        is_leaf=lambda x: isinstance(x, tuple))
+        v = _tree_map(lambda t2: t2[1], flat,
+                      is_leaf=lambda x: isinstance(x, tuple))
+        return new, {"step": step, "v": v}
+
+    return Optimizer("adafactor", init, update)
+
+
+_REGISTRY: Dict[str, Callable[..., Optimizer]] = {
+    "sgd": sgd, "momentum": momentum, "adam": adam, "adamw": adamw,
+    "adamw_bf16": adamw_bf16, "adafactor": adafactor,
+}
+
+
+def make_optimizer(name: str, lr: float = 1e-3, **kw) -> Optimizer:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown optimizer {name!r}: {list(_REGISTRY)}")
+    return _REGISTRY[name](lr=lr, **kw)

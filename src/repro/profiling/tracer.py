@@ -1,0 +1,119 @@
+"""Builds op-level step DAGs for PS training jobs from DNN layer tables.
+
+The DAG structure mirrors the paper's Fig. 6: per layer i
+
+    downlink_i ----> fwd_i ----> ... ----> bwd_i ----> uplink_i ----> update_i
+                      ^                      ^
+    fwd_{i-1} --------+       bwd_{i+1} -----+
+
+All downlink ops are roots (TensorFlow requests every tensor at step start,
+Fig. 8a).  Backward propagation runs in reverse layer order; each layer's
+update is transmitted as soon as it is ready.
+
+With ``num_ps > 1`` layers are assigned to parameter servers greedily by
+current total byte size (paper §5, Fig. 23) and ops use per-PS resources.
+
+``order`` controls downlink/uplink priorities for enforced-order scheduling
+(§3.3): 'layer' (TIC order for sequential models: transmit layer 0 first),
+'reverse', 'random', or 'profiled' (arbitrary arrival order, priority 0).
+"""
+from __future__ import annotations
+
+import random
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.overhead import RecordedOp, RecordedStep
+from repro.core.paper_models import DnnSpec, Platform, layer_compute_times
+
+
+def assign_layers_greedy(dnn: DnnSpec, num_ps: int) -> List[int]:
+    """Greedy layer -> PS assignment by smallest current total bytes (§5)."""
+    totals = [0.0] * num_ps
+    assignment = []
+    for layer in dnn.layers:
+        p = min(range(num_ps), key=lambda i: totals[i])
+        assignment.append(p)
+        totals[p] += layer.param_bytes
+    return assignment
+
+
+def ps_split_bytes(dnn: DnnSpec, num_ps: int,
+                   assignment: Optional[Sequence[int]] = None) -> List[float]:
+    if assignment is None:
+        assignment = assign_layers_greedy(dnn, num_ps)
+    totals = [0.0] * num_ps
+    for layer, p in zip(dnn.layers, assignment):
+        totals[p] += layer.param_bytes
+    return totals
+
+
+def build_job_step(dnn: DnnSpec, batch_size: int, platform: Platform,
+                   num_ps: int = 1,
+                   assignment: Optional[Sequence[int]] = None,
+                   order: str = "layer",
+                   seed: int = 0) -> RecordedStep:
+    """Noise-free recorded step for a training job (ideal profile).
+
+    The emulator perturbs this with its own dynamics; the analytic form is
+    used in unit tests and for what-if prediction without profiling.
+    """
+    L = len(dnn.layers)
+    if assignment is None:
+        assignment = assign_layers_greedy(dnn, num_ps) if num_ps > 1 else [0] * L
+    times = layer_compute_times(dnn, batch_size, platform)
+
+    if order == "layer":
+        prio = list(range(L))
+    elif order == "reverse":
+        prio = list(range(L - 1, -1, -1))
+    elif order == "random":
+        prio = list(range(L))
+        random.Random(seed).shuffle(prio)
+    elif order == "profiled":
+        prio = [0] * L
+    else:
+        raise ValueError(f"unknown order {order!r}")
+
+    def link(kind: str, p: int) -> str:
+        return kind if num_ps == 1 else f"{kind}:{p}"
+
+    def ps_res(p: int) -> str:
+        return "ps" if num_ps == 1 else f"ps:{p}"
+
+    ops: List[RecordedOp] = []
+    idx: Dict[Tuple[str, int], int] = {}
+
+    def add(op: RecordedOp, key: Tuple[str, int]) -> int:
+        ops.append(op)
+        idx[key] = len(ops) - 1
+        return len(ops) - 1
+
+    for i, layer in enumerate(dnn.layers):
+        add(RecordedOp(name=f"down/{layer.name}", res=link("downlink", assignment[i]),
+                       deps=(), size=layer.param_bytes, priority=prio[i],
+                       tags={"layer": i}), ("down", i))
+    for i, (lname, fwd, _bwd, _upd) in enumerate(times):
+        deps = [idx[("down", i)]]
+        if i > 0:
+            deps.append(idx[("fwd", i - 1)])
+        add(RecordedOp(name=f"fwd/{lname}", res="worker", deps=tuple(deps),
+                       start=0.0, end=fwd, tags={"layer": i}), ("fwd", i))
+    for i in range(L - 1, -1, -1):
+        lname, _fwd, bwd, _upd = times[i]
+        deps = [idx[("fwd", L - 1)]] if i == L - 1 else [idx[("bwd", i + 1)]]
+        add(RecordedOp(name=f"bwd/{lname}", res="worker", deps=tuple(deps),
+                       start=0.0, end=bwd, tags={"layer": i}), ("bwd", i))
+    for i, layer in enumerate(dnn.layers):
+        add(RecordedOp(name=f"up/{layer.name}", res=link("uplink", assignment[i]),
+                       deps=(idx[("bwd", i)],), size=layer.param_bytes,
+                       priority=prio[i], tags={"layer": i}), ("up", i))
+        _lname, _fwd, _bwd, upd = times[i]
+        add(RecordedOp(name=f"update/{layer.name}", res=ps_res(assignment[i]),
+                       deps=(idx[("up", i)],), start=0.0, end=upd,
+                       tags={"layer": i}), ("upd", i))
+
+    return RecordedStep(ops=ops, meta={
+        "dnn": dnn.name, "batch_size": batch_size, "platform": platform.name,
+        "num_ps": num_ps, "order": order,
+        "assignment": list(assignment),
+    })

@@ -1,0 +1,79 @@
+"""Bandwidth sharing (paper §3.1 single PS, §5 two PS) + water-filling."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bandwidth import BandwidthModel, EqualShareModel
+
+
+class TestEqualShare:
+    def test_single_worker_full_rate(self):
+        m = EqualShareModel()
+        s = m.shares({"downlink": {0}})
+        assert s[(0, "downlink")] == 1.0
+
+    def test_n_workers_equal(self):
+        m = EqualShareModel()
+        s = m.shares({"uplink": {0, 1, 2, 3}})
+        for w in range(4):
+            assert s[(w, "uplink")] == pytest.approx(0.25)
+
+    def test_directions_independent(self):
+        m = EqualShareModel()
+        s = m.shares({"downlink": {0, 1}, "uplink": {0}})
+        assert s[(0, "downlink")] == pytest.approx(0.5)
+        assert s[(0, "uplink")] == pytest.approx(1.0)
+
+
+class TestWaterFilling:
+    def test_reduces_to_equal_share_one_ps(self):
+        wf = BandwidthModel()
+        eq = EqualShareModel()
+        active = {"downlink": {0, 1, 2}}
+        s1, s2 = wf.shares(active), eq.shares(active)
+        for k in s2:
+            assert s1[k] == pytest.approx(s2[k])
+
+    def test_paper_section5_cap_rule(self):
+        """Worker 0 alone on PS1 but sharing PS2 with n-1 others:
+        1/n on PS2, at most 1 - 1/n on PS1."""
+        n = 4
+        wf = BandwidthModel()
+        active = {"downlink:0": {0},                 # PS1: only worker 0
+                  "downlink:1": set(range(n))}       # PS2: all n workers
+        s = wf.shares(active)
+        assert s[(0, "downlink:1")] == pytest.approx(1.0 / n)
+        assert s[(0, "downlink:0")] == pytest.approx(1.0 - 1.0 / n)
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.dictionaries(
+        st.sampled_from(["downlink:0", "downlink:1", "downlink:2",
+                         "uplink:0", "uplink:1"]),
+        st.sets(st.integers(0, 5), min_size=1, max_size=6),
+        min_size=1, max_size=5))
+    def test_feasibility_and_nonwaste(self, active):
+        """Property: no link or NIC over capacity; every constraint that
+        limits someone is saturated (max-min fairness non-wastefulness)."""
+        wf = BandwidthModel()
+        shares = wf.shares(active)
+        # link capacity
+        for link, ws in active.items():
+            total = sum(shares[(w, link)] for w in ws)
+            assert total <= 1.0 + 1e-9
+        # NIC capacity per (worker, direction)
+        nic = {}
+        for (w, link), s in shares.items():
+            d = link.split(":")[0]
+            nic[(w, d)] = nic.get((w, d), 0.0) + s
+        for v in nic.values():
+            assert v <= 1.0 + 1e-9
+        # all shares positive
+        assert all(s > 0 for s in shares.values())
+        # non-wastefulness: each connection is limited by at least one
+        # saturated constraint
+        for (w, link), s in shares.items():
+            d = link.split(":")[0]
+            link_total = sum(shares[(w2, link)] for w2 in active[link])
+            nic_total = nic[(w, d)]
+            assert (link_total >= 1.0 - 1e-6) or (nic_total >= 1.0 - 1e-6)

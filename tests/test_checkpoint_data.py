@@ -1,0 +1,146 @@
+"""Checkpoint manager (atomicity, restart equivalence, elastic re-shard)
+and the synthetic data pipeline."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ck
+from repro.configs import get_config
+from repro.data import SyntheticLM
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        tree = {"a": jnp.arange(12.0).reshape(3, 4),
+                "b": {"c": jnp.ones((5,), jnp.int32)}}
+        ck.save(str(tmp_path), 7, tree, metadata={"k": "v"})
+        out, meta = ck.restore(str(tmp_path), tree)
+        np.testing.assert_array_equal(np.asarray(out["a"]),
+                                      np.asarray(tree["a"]))
+        assert meta == {"k": "v"}
+        assert ck.latest_step(str(tmp_path)) == 7
+
+    def test_latest_pointer_advances(self, tmp_path):
+        tree = {"a": jnp.zeros(2)}
+        ck.save(str(tmp_path), 1, tree)
+        ck.save(str(tmp_path), 5, tree)
+        assert ck.latest_step(str(tmp_path)) == 5
+
+    def test_structure_mismatch_rejected(self, tmp_path):
+        ck.save(str(tmp_path), 0, {"a": jnp.zeros(2)})
+        with pytest.raises(ValueError):
+            ck.restore(str(tmp_path), {"a": jnp.zeros(2),
+                                       "b": jnp.zeros(3)})
+
+    def test_shape_mismatch_rejected(self, tmp_path):
+        ck.save(str(tmp_path), 0, {"a": jnp.zeros(2)})
+        with pytest.raises(ValueError):
+            ck.restore(str(tmp_path), {"a": jnp.zeros(3)})
+
+    def test_cleanup_keeps_newest(self, tmp_path):
+        tree = {"a": jnp.zeros(1)}
+        for s in range(6):
+            ck.save(str(tmp_path), s, tree)
+        ck.cleanup(str(tmp_path), keep=2)
+        dirs = sorted(d for d in os.listdir(tmp_path)
+                      if d.startswith("step_"))
+        assert dirs == ["step_00000004", "step_00000005"]
+
+    def test_restart_equivalence(self, tmp_path):
+        """Train N steps straight == train, crash, resume (same losses)."""
+        from repro.launch.train import build_argparser, run
+        ap = build_argparser()
+        base = ["--arch", "xlstm-350m", "--steps", "12", "--batch", "2",
+                "--seq", "16", "--ckpt-every", "4", "--log-every", "100"]
+        r1 = run(ap.parse_args(base + ["--ckpt-dir",
+                                       str(tmp_path / "a")]))
+        # crash at step 9, then resume
+        with pytest.raises(RuntimeError):
+            run(ap.parse_args(base + ["--ckpt-dir", str(tmp_path / "b"),
+                                      "--fail-at", "9"]))
+        r2 = run(ap.parse_args(base + ["--ckpt-dir", str(tmp_path / "b")]))
+        assert r2["last_loss"] == pytest.approx(r1["last_loss"], rel=1e-4)
+
+    def test_elastic_reshard_on_restore(self, tmp_path):
+        """Save unsharded, restore onto a (4,2)-device mesh: values equal,
+        shardings follow the restore-time mesh rules (subprocess: needs 8
+        host devices)."""
+        code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+import sys
+sys.path.insert(0, "src")
+from repro import checkpoint as ck
+tree = {"mlp": {"wi": jnp.arange(32.0).reshape(4, 8)}}
+ck.save(sys.argv[1], 0, tree)
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+out, _ = ck.restore(sys.argv[1], tree, mesh=mesh)
+np.testing.assert_array_equal(np.asarray(out["mlp"]["wi"]),
+                              np.asarray(tree["mlp"]["wi"]))
+sh = out["mlp"]["wi"].sharding
+assert not sh.is_fully_replicated, sh
+mesh2 = jax.make_mesh((8, 1), ("data", "model"))
+out2, _ = ck.restore(sys.argv[1], tree, mesh=mesh2)
+np.testing.assert_array_equal(np.asarray(out2["mlp"]["wi"]),
+                              np.asarray(tree["mlp"]["wi"]))
+print("OK")
+"""
+        r = subprocess.run([sys.executable, "-c", code, str(tmp_path)],
+                           capture_output=True, text=True,
+                           cwd="/root/repo", timeout=300)
+        assert "OK" in r.stdout, r.stderr[-2000:]
+
+
+class TestDataPipeline:
+    def test_deterministic(self):
+        cfg = get_config("gemma-7b", smoke=True)
+        a = SyntheticLM(cfg, 8, 32, seed=3)
+        b = SyntheticLM(cfg, 8, 32, seed=3)
+        for _ in range(3):
+            ba, bb = a.next_batch(), b.next_batch()
+            np.testing.assert_array_equal(np.asarray(ba["tokens"]),
+                                          np.asarray(bb["tokens"]))
+
+    def test_shards_differ_but_cover(self):
+        cfg = get_config("gemma-7b", smoke=True)
+        s0 = SyntheticLM(cfg, 8, 32, seed=3, shard=0, num_shards=2)
+        s1 = SyntheticLM(cfg, 8, 32, seed=3, shard=1, num_shards=2)
+        b0, b1 = s0.next_batch(), s1.next_batch()
+        assert b0["tokens"].shape == (4, 32)
+        assert not np.array_equal(np.asarray(b0["tokens"]),
+                                  np.asarray(b1["tokens"]))
+
+    def test_state_resume_bit_exact(self):
+        cfg = get_config("gemma-7b", smoke=True)
+        a = SyntheticLM(cfg, 4, 16, seed=1)
+        a.next_batch()
+        saved = a.state_dict()
+        want = a.next_batch()
+        b = SyntheticLM(cfg, 4, 16, seed=99)
+        b.load_state_dict(saved)
+        got = b.next_batch()
+        np.testing.assert_array_equal(np.asarray(got["tokens"]),
+                                      np.asarray(want["tokens"]))
+
+    def test_labels_shifted(self):
+        cfg = get_config("gemma-7b", smoke=True)
+        d = SyntheticLM(cfg, 2, 16, seed=0)
+        b = d.next_batch()
+        assert b["tokens"].shape == b["labels"].shape
+        assert (np.asarray(b["labels"]) < cfg.vocab).all()
+
+    def test_modality_stubs(self):
+        cfg = get_config("whisper-small", smoke=True)
+        d = SyntheticLM(cfg, 2, 16, seed=0)
+        b = d.next_batch()
+        assert b["frames"].shape == (2, cfg.encoder_len, cfg.d_model)
+        cfg2 = get_config("llama-3.2-vision-90b", smoke=True)
+        d2 = SyntheticLM(cfg2, 2, 16, seed=0)
+        b2 = d2.next_batch()
+        assert b2["enc_embed"].shape == (2, cfg2.cross_len, cfg2.d_model)

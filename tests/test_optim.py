@@ -1,0 +1,126 @@
+"""Optimizers, async-SGD staleness semantics, gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import (async_init, async_step, make_compressor,
+                         make_optimizer, outer_apply)
+
+
+@pytest.mark.parametrize("name,lr", [
+    ("sgd", 0.05), ("momentum", 0.02), ("adam", 0.05), ("adamw", 0.05),
+    ("adamw_bf16", 0.05), ("adafactor", 0.1),
+])
+def test_optimizers_minimize_quadratic(name, lr):
+    opt = make_optimizer(name, lr=lr)
+    p = {"w": jnp.full((4, 4), 3.0), "b": jnp.full((4,), -2.0)}
+    st_ = opt.init(p)
+    for _ in range(300):
+        g = jax.tree_util.tree_map(lambda x: 2 * (x - 1.0), p)
+        p, st_ = opt.update(g, st_, p)
+    for leaf in jax.tree_util.tree_leaves(p):
+        assert float(jnp.max(jnp.abs(leaf - 1.0))) < 0.05
+
+
+def test_adafactor_state_is_factored():
+    opt = make_optimizer("adafactor", lr=0.1)
+    p = {"w": jnp.zeros((64, 32))}
+    st_ = opt.init(p)
+    n_state = sum(l.size for l in jax.tree_util.tree_leaves(st_["v"]))
+    assert n_state == 64 + 32  # O(n+m), not O(nm)
+
+
+class TestAsyncSGD:
+    def test_zero_staleness_is_sync(self):
+        opt = make_optimizer("sgd", lr=0.1)
+        s = async_init({"w": jnp.ones(())}, opt, staleness=0)
+        s = async_step(s, {"w": jnp.ones(())}, opt, staleness=0)
+        assert float(s.params["w"]) == pytest.approx(0.9)
+
+    def test_staleness_delays_application(self):
+        """With staleness tau, the first tau submissions apply zeros."""
+        opt = make_optimizer("sgd", lr=1.0)
+        tau = 3
+        s = async_init({"w": jnp.zeros(())}, opt, staleness=tau)
+        for i in range(tau):
+            s = async_step(s, {"w": jnp.ones(()) * (i + 1)}, opt,
+                           staleness=tau)
+            # still applying warmup zeros
+        assert float(s.params["w"]) == pytest.approx(0.0)
+        s = async_step(s, {"w": jnp.ones(()) * 99}, opt, staleness=tau)
+        # now the FIRST submitted gradient (1.0) lands
+        assert float(s.params["w"]) == pytest.approx(-1.0)
+
+    def test_async_converges_with_staleness(self):
+        opt = make_optimizer("sgd", lr=0.05)
+        s = async_init({"w": jnp.full((), 3.0)}, opt, staleness=4)
+        for _ in range(400):
+            g = {"w": 2 * (s.params["w"] - 1.0)}
+            s = async_step(s, g, opt, staleness=4)
+        assert float(jnp.abs(s.params["w"] - 1.0)) < 0.05
+
+    def test_staleness_scaling_damps(self):
+        g = {"w": jnp.ones(())}
+        out = outer_apply({"w": jnp.ones(()) * 2},
+                          {"w": jnp.ones(())}, outer_lr=1.0, staleness=3)
+        # delta = 1, scale = 1/(1+3) -> new = 2 - 0.25
+        assert float(out["w"]) == pytest.approx(1.75)
+
+
+class TestCompression:
+    def test_int8_roundtrip_error_bounded(self):
+        comp = make_compressor("int8")
+        g = {"w": jnp.linspace(-1, 1, 256).reshape(16, 16)}
+        err = comp.init(g)
+        payload, err = comp.compress(g, err)
+        dec = comp.decompress(payload)
+        assert float(jnp.max(jnp.abs(dec["w"] - g["w"]))) < 1.5 / 127
+
+    def test_int8_wire_is_quarter_fp32(self):
+        comp = make_compressor("int8")
+        g = {"w": jnp.ones((64, 64))}
+        payload, _ = comp.compress(g, comp.init(g))
+        assert comp.wire_bytes(payload) <= 64 * 64 * 1 + 16
+
+    def test_error_feedback_preserves_signal(self):
+        """Sum of decompressed gradients + final residual == sum of raw
+        gradients (no lost mass)."""
+        comp = make_compressor("int8")
+        key = jax.random.PRNGKey(0)
+        g_total = jnp.zeros((8, 8))
+        d_total = jnp.zeros((8, 8))
+        err = comp.init({"w": g_total})
+        for i in range(20):
+            g = {"w": jax.random.normal(jax.random.fold_in(key, i),
+                                        (8, 8)) * 0.1}
+            payload, err = comp.compress(g, err)
+            d_total = d_total + comp.decompress(payload)["w"]
+            g_total = g_total + g["w"]
+        residual = err["w"]
+        np.testing.assert_allclose(np.asarray(d_total + residual),
+                                   np.asarray(g_total), atol=1e-4)
+
+    def test_topk_sparsity(self):
+        comp = make_compressor("topk", fraction=0.1)
+        g = {"w": jnp.arange(100.0).reshape(10, 10)}
+        payload, _ = comp.compress(g, comp.init(g))
+        dec = comp.decompress(payload)
+        assert int((dec["w"] != 0).sum()) == 10
+        # keeps the largest magnitudes
+        assert float(dec["w"][9, 9]) == 99.0
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.floats(0.02, 0.5))
+    def test_topk_error_feedback_converges(self, frac):
+        """With error feedback, repeated compression of a CONSTANT gradient
+        keeps the residual bounded: every entry is transmitted at least once
+        per ~1/frac rounds, so |residual| <= max|g| / frac."""
+        comp = make_compressor("topk", fraction=frac)
+        g = {"w": jnp.linspace(0.1, 1.0, 64).reshape(8, 8)}
+        err = comp.init(g)
+        for _ in range(60):
+            payload, err = comp.compress(g, err)
+        bound = float(jnp.max(g["w"])) / frac + 1.0
+        assert float(jnp.max(jnp.abs(err["w"]))) <= bound

@@ -1,0 +1,78 @@
+"""Parsing-overhead model (paper §3.2.1) + profile preprocessing."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.events import LINK
+from repro.core.overhead import (OverheadModel, RecordedOp, RecordedStep,
+                                 preprocess_recorded_step)
+
+
+class TestFit:
+    def test_exact_recovery(self):
+        alpha, beta = 2e-9, 5e-4
+        sizes = [1e5 * 2 ** i for i in range(8)]
+        ys = [alpha * s + beta for s in sizes]
+        m = OverheadModel.fit(sizes, ys)
+        assert m.alpha == pytest.approx(alpha, rel=1e-6)
+        assert m.beta == pytest.approx(beta, rel=1e-6)
+        assert m.r_squared(sizes, ys) == pytest.approx(1.0)
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.floats(1e-10, 1e-8), st.floats(1e-5, 1e-2))
+    def test_recovery_under_parameter_sweep(self, alpha, beta):
+        sizes = np.linspace(1e5, 5e7, 12)
+        ys = alpha * sizes + beta
+        m = OverheadModel.fit(sizes, ys)
+        assert m.alpha == pytest.approx(alpha, rel=1e-4)
+        assert m.beta == pytest.approx(beta, rel=1e-3)
+
+    def test_nonnegative_clamp(self):
+        m = OverheadModel.fit([1.0, 2.0, 3.0], [3.0, 2.0, 1.0])
+        assert m.alpha >= 0.0
+
+
+class TestPreprocess:
+    def _step(self):
+        ops = [
+            RecordedOp("down/a", "downlink", deps=(), size=1000,
+                       start=0.0, end=2.0),
+            RecordedOp("fwd/a", "worker", deps=(0,), start=2.0, end=3.0),
+            RecordedOp("up/a", "uplink", deps=(1,), size=500,
+                       start=3.0, end=4.0),
+            RecordedOp("upd/a", "ps", deps=(2,), start=4.0, end=4.5),
+        ]
+        return RecordedStep(ops=ops)
+
+    def test_comm_split_into_link_and_parse(self):
+        m = OverheadModel(alpha=1e-3, beta=0.1)
+        tpl = preprocess_recorded_step(self._step(), m)
+        names = [op.name for op in tpl.ops]
+        assert "down/a" in names and "down/a/parse" in names
+        assert "up/a" in names and "up/a/parse" in names
+        link = tpl.ops[names.index("down/a")]
+        assert link.size == 1000 and link.duration == 0.0
+        parse = tpl.ops[names.index("down/a/parse")]
+        assert parse.duration == pytest.approx(1e-3 * 1000 + 0.1)
+        assert parse.res == "parse"
+
+    def test_dependents_repointed_at_parse_op(self):
+        """fwd must wait for the downlink's PARSE, not just the transfer."""
+        m = OverheadModel(alpha=0.0, beta=0.0)
+        tpl = preprocess_recorded_step(self._step(), m)
+        names = [op.name for op in tpl.ops]
+        fwd = tpl.ops[names.index("fwd/a")]
+        assert names.index("down/a/parse") in fwd.deps
+
+    def test_uplink_parse_on_ps_resource(self):
+        m = OverheadModel(alpha=0.0, beta=1.0)
+        tpl = preprocess_recorded_step(self._step(), m)
+        names = [op.name for op in tpl.ops]
+        assert tpl.ops[names.index("up/a/parse")].res == "ps"
+
+    def test_compute_durations_preserved(self):
+        m = OverheadModel(alpha=0.0, beta=0.0)
+        tpl = preprocess_recorded_step(self._step(), m)
+        names = [op.name for op in tpl.ops]
+        assert tpl.ops[names.index("fwd/a")].duration == pytest.approx(1.0)
+        assert tpl.ops[names.index("upd/a")].duration == pytest.approx(0.5)

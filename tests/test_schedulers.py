@@ -1,0 +1,122 @@
+"""Scheduler semantics (paper §3.2.2, Fig. 12)."""
+import pytest
+
+from repro.core.events import LiveOp, Op, ResourceSpec, LINK
+from repro.core.schedulers import (FifoScheduler, Http2Scheduler,
+                                   OrderedScheduler, make_link_scheduler)
+
+RES = {"downlink": ResourceSpec("downlink", LINK, 1e6)}
+
+
+def live(size, priority=0.0, name="op"):
+    op = Op(name=name, res="downlink", size=size, priority=priority)
+    return LiveOp.fresh(op, worker=0, step_seq=0, resources=RES)
+
+
+def drain(sched):
+    """Drive the simulator's protocol: on a non-last chunk's completion the
+    op is re-added to the back of the queue (requeue-at-completion)."""
+    out = []
+    while sched:
+        c = sched.remove_chunk()
+        out.append((c.op.name, c.remaining, c.is_last))
+        if not c.is_last:
+            sched.add(c.op)
+    return out
+
+
+class TestHttp2:
+    def test_small_stream_single_chunk(self):
+        s = Http2Scheduler(win=100)
+        s.add(live(60, name="a"))
+        c = s.remove_chunk()
+        assert c.is_last and c.remaining == 60
+        assert not s
+
+    def test_large_stream_preempted_once(self):
+        """First service: WIN bytes; second service: the remainder, whole.
+        The simulator re-adds the op when the burst COMPLETES."""
+        s = Http2Scheduler(win=100)
+        s.add(live(250, name="a"))
+        c1 = s.remove_chunk()
+        assert not c1.is_last and c1.remaining == 100
+        s.add(c1.op)                                # burst completed
+        c2 = s.remove_chunk()
+        assert c2.is_last and c2.remaining == 150   # remainder, not 250
+        assert not s
+
+    def test_win_carved_out_of_remaining_work(self):
+        """Regression: the second service must transmit size - WIN."""
+        s = Http2Scheduler(win=100)
+        op = live(250, name="a")
+        s.add(op)
+        s.remove_chunk()
+        assert op.remaining_work == 150
+
+    def test_preempted_stream_goes_to_back(self):
+        """Streams that arrive DURING the burst are served before the
+        preempted remainder (requeue-at-completion, Fig. 12)."""
+        s = Http2Scheduler(win=100)
+        s.add(live(250, name="big"))
+        first = s.remove_chunk()
+        assert first.op.name == "big" and not first.is_last
+        s.add(live(50, name="small"))               # arrives mid-burst
+        s.add(first.op)                             # burst completes
+        second = s.remove_chunk()
+        assert second.op.name == "small"
+        third = s.remove_chunk()
+        assert third.op.name == "big" and third.is_last
+
+    def test_exactly_win_not_preempted(self):
+        s = Http2Scheduler(win=100)
+        s.add(live(100, name="a"))
+        c = s.remove_chunk()
+        assert c.is_last and c.remaining == 100
+
+    def test_second_service_runs_to_completion_even_if_large(self):
+        """Stream preemption happens only once (paper observation)."""
+        s = Http2Scheduler(win=100)
+        s.add(live(1000, name="a"))
+        c1 = s.remove_chunk()
+        assert c1.remaining == 100
+        s.add(c1.op)
+        c2 = s.remove_chunk()
+        assert c2.is_last and c2.remaining == 900   # >> WIN, still whole
+
+    def test_bad_win(self):
+        with pytest.raises(ValueError):
+            Http2Scheduler(win=0)
+
+
+class TestFifoOrdered:
+    def test_fifo_order(self):
+        s = FifoScheduler()
+        for n in "abc":
+            s.add(live(10, name=n))
+        assert [s.remove_chunk().op.name for _ in "abc"] == list("abc")
+
+    def test_fifo_whole_streams(self):
+        s = FifoScheduler()
+        s.add(live(1e9, name="a"))
+        c = s.remove_chunk()
+        assert c.is_last and c.remaining == 1e9
+
+    def test_ordered_by_priority(self):
+        s = OrderedScheduler()
+        s.add(live(10, priority=2, name="c"))
+        s.add(live(10, priority=0, name="a"))
+        s.add(live(10, priority=1, name="b"))
+        assert [s.remove_chunk().op.name for _ in "abc"] == list("abc")
+
+    def test_ordered_ties_by_arrival(self):
+        s = OrderedScheduler()
+        s.add(live(10, priority=0, name="a"))
+        s.add(live(10, priority=0, name="b"))
+        assert s.remove_chunk().op.name == "a"
+
+    def test_factory(self):
+        assert isinstance(make_link_scheduler("http2"), Http2Scheduler)
+        assert isinstance(make_link_scheduler("fifo"), FifoScheduler)
+        assert isinstance(make_link_scheduler("ordered"), OrderedScheduler)
+        with pytest.raises(ValueError):
+            make_link_scheduler("nope")

@@ -1,0 +1,126 @@
+"""Algorithm 3.1 simulator: exactness on crafted DAGs + invariants."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.events import Op, StepTemplate, ps_resources
+from repro.core.simulator import SimConfig, Simulation
+
+BW = 100.0  # bytes/s for easy arithmetic
+
+
+def run_once(ops, workers=1, steps=1, policy="fifo", win=1e18, seed=0,
+             bandwidth=BW):
+    cfg = SimConfig(resources=ps_resources(bandwidth), link_policy=policy,
+                    win=win, steps_per_worker=steps, warmup_steps=0,
+                    seed=seed, record_op_times=True)
+    sim = Simulation(cfg)
+    tpl = StepTemplate(ops=list(ops))
+    trace = sim.run([tpl], workers, sample=False)
+    return trace
+
+
+class TestSerialChain:
+    def test_down_compute_up(self):
+        """down(200B) -> fwd(1s) -> up(100B): serial = 2 + 1 + 1 = 4s."""
+        ops = [Op("d", "downlink", size=200),
+               Op("f", "worker", duration=1.0, deps=(0,)),
+               Op("u", "uplink", size=100, deps=(1,))]
+        tr = run_once(ops)
+        assert tr.step_completions[0][2] == pytest.approx(4.0)
+
+    def test_parallel_links_overlap(self):
+        """Independent down(200B) and up(200B) overlap fully: 2s not 4s."""
+        ops = [Op("d", "downlink", size=200), Op("u", "uplink", size=200)]
+        tr = run_once(ops)
+        assert tr.step_completions[0][2] == pytest.approx(2.0)
+
+    def test_compute_overlaps_comm(self):
+        """fwd ready at t=0 runs while a big downlink streams."""
+        ops = [Op("d", "downlink", size=1000),
+               Op("f", "worker", duration=5.0)]
+        tr = run_once(ops)
+        assert tr.step_completions[0][2] == pytest.approx(10.0)
+
+
+class TestBandwidthSharing:
+    def test_two_workers_halve_rate(self):
+        """Two workers with one 100B downlink each on a 100B/s link:
+        processor sharing finishes both at t=2 (not 1 and 2)."""
+        ops = [Op("d", "downlink", size=100)]
+        tr = run_once(ops, workers=2)
+        times = sorted(t for _w, _s, t in tr.step_completions)
+        assert times[0] == pytest.approx(2.0)
+        assert times[1] == pytest.approx(2.0)
+
+    def test_staggered_sharing(self):
+        """w0: 100B at t=0; w1 joins after its 1s compute: w0 sees full
+        rate for 1s (100B sent? no -> shares). Validate total time."""
+        ops0 = [Op("d", "downlink", size=200)]
+        # craft via two different steps is not supported in one call;
+        # instead check conservation: total bytes / capacity <= makespan
+        tr = run_once(ops0, workers=3)
+        end = max(t for _w, _s, t in tr.step_completions)
+        assert end == pytest.approx(3 * 200 / BW)  # saturated link
+
+
+class TestHttp2Timing:
+    def test_win_chunk_interleave(self):
+        """A(150) then B(60) with WIN=100: A sends 100, B sends 60,
+        A remainder 50. End(A)=2.1s, End(B)=1.6s."""
+        ops = [Op("a", "downlink", size=150), Op("b", "downlink", size=60)]
+        tr = run_once(ops, policy="http2", win=100)
+        times = {name: e for _w, _s, name, _r, s, e in tr.op_times}
+        assert times["b"] == pytest.approx(1.6)
+        assert times["a"] == pytest.approx(2.1)
+
+
+class TestDependencies:
+    def test_diamond(self):
+        ops = [Op("a", "worker", duration=1.0),
+               Op("b", "downlink", size=100, deps=(0,)),
+               Op("c", "uplink", size=100, deps=(0,)),
+               Op("d", "worker", duration=1.0, deps=(1, 2))]
+        tr = run_once(ops)
+        assert tr.step_completions[0][2] == pytest.approx(3.0)
+
+    def test_cycle_rejected(self):
+        with pytest.raises(ValueError):
+            StepTemplate(ops=[Op("a", "worker", duration=1, deps=(1,)),
+                              Op("b", "worker", duration=1, deps=(0,))])
+
+    def test_multi_step_steady_state(self):
+        ops = [Op("d", "downlink", size=100),
+               Op("f", "worker", duration=1.0, deps=(0,)),
+               Op("u", "uplink", size=100, deps=(1,))]
+        tr = run_once(ops, steps=5)
+        ends = [t for _w, _s, t in tr.step_completions]
+        diffs = [b - a for a, b in zip(ends, ends[1:])]
+        for d in diffs:
+            assert d == pytest.approx(3.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["downlink", "worker", "uplink"]),
+                          st.floats(1.0, 50.0)),
+                min_size=1, max_size=8),
+       st.integers(1, 3))
+def test_property_makespan_bounds(chain, workers):
+    """For a serial chain, makespan must lie between the critical-path
+    lower bound and the fully-serialized upper bound, and total completed
+    steps must equal workers * steps."""
+    ops = []
+    for i, (res, amount) in enumerate(chain):
+        deps = (i - 1,) if i else ()
+        if res == "worker":
+            ops.append(Op(f"o{i}", res, duration=amount, deps=deps))
+        else:
+            ops.append(Op(f"o{i}", res, size=amount, deps=deps))
+    tr = run_once(ops, workers=workers)
+    assert len(tr.step_completions) == workers
+    serial = sum(a if r == "worker" else a / BW for r, a in chain)
+    end = max(t for _w, _s, t in tr.step_completions)
+    # lower bound: serial chain of one worker; upper: all work serialized
+    assert end >= serial - 1e-6
+    assert end <= workers * serial + 1e-6
