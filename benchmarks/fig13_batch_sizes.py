@@ -3,6 +3,7 @@ across batch sizes — our prediction vs measured, plus the Lin et al. and
 Cynthia baselines (paper §4.2, §4.4)."""
 from __future__ import annotations
 
+from repro.core import sweep
 from repro.core.predictor import PredictionRun, prediction_error
 
 from .common import pct, row, save_json
@@ -20,9 +21,12 @@ def run(batches=BATCHES, workers=WORKERS, platform="private_cpu",
         r = PredictionRun(dnn=dnn, batch_size=bs, platform=platform,
                           profile_steps=profile_steps, sim_steps=sim_steps)
         r.prepare()
+        # all (W, seed) simulation + measurement tasks fanned over the pool
+        pred, meas_mean = sweep.predict_and_measure(
+            r, workers, measure_steps=measure_steps, measure_runs=3)
         for w in workers:
-            meas = r.measure_mean(w, steps=measure_steps)
-            ours = r.predict(w)
+            meas = meas_mean[w]
+            ours = pred[w]
             lin = r.predict_baseline(w, "lin")
             cyn = r.predict_baseline(w, "cynthia")
             cyn2 = r.predict_baseline(w, "cynthia2")

@@ -2,6 +2,7 @@
 cluster (paper §4.2)."""
 from __future__ import annotations
 
+from repro.core import sweep
 from repro.core.predictor import PredictionRun, prediction_error
 
 from .common import pct, row, save_json
@@ -18,9 +19,11 @@ def run(models=MODELS, workers=WORKERS, batch=8, platform="private_cpu",
         r = PredictionRun(dnn=dnn, batch_size=batch, platform=platform,
                           profile_steps=profile_steps, sim_steps=sim_steps)
         r.prepare()
+        pred, meas_mean = sweep.predict_and_measure(
+            r, workers, measure_steps=measure_steps, measure_runs=3)
         for w in workers:
-            meas = r.measure_mean(w, steps=measure_steps)
-            ours = r.predict(w)
+            meas = meas_mean[w]
+            ours = pred[w]
             err = prediction_error(ours, meas)
             out["rows"].append({"dnn": dnn, "W": w, "measured": meas,
                                 "ours": ours, "our_err": err})

@@ -2,6 +2,7 @@
 accuracy with the §5 bandwidth-sharing model (paper §5)."""
 from __future__ import annotations
 
+from repro.core import sweep
 from repro.core.paper_models import PAPER_DNNS
 from repro.core.predictor import PredictionRun, prediction_error
 from repro.profiling.tracer import ps_split_bytes
@@ -35,10 +36,14 @@ def run(cases=CASES, workers=WORKERS, platform="aws_gpu",
                            num_ps=1, profile_steps=profile_steps,
                            sim_steps=sim_steps)
         r1.prepare()
+        pred2_d, meas2_d = sweep.predict_and_measure(
+            r2, workers, measure_steps=measure_steps, measure_runs=3)
+        meas1_d = sweep.measure_many(r1, workers, steps=measure_steps,
+                                     n_runs=3)
         for w in workers:
-            meas2 = r2.measure_mean(w, steps=measure_steps)
-            pred2 = r2.predict(w)
-            meas1 = r1.measure_mean(w, steps=measure_steps)
+            meas2 = meas2_d[w]
+            pred2 = pred2_d[w]
+            meas1 = meas1_d[w]
             err = prediction_error(pred2, meas2)
             out["rows"].append({"dnn": dnn, "W": w, "meas_2ps": meas2,
                                 "pred_2ps": pred2, "err": err,

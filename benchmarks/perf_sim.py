@@ -1,0 +1,151 @@
+"""Simulator engine benchmark: events/sec + figure-equivalent sweep time.
+
+Times the incremental event-calendar engine (``repro.core.simulator``)
+against the frozen seed engine (``repro.core.simulator_ref``) on synthetic
+PS-training StepTemplates of three sizes and several worker counts, plus a
+figure-equivalent (W, seed) sweep run serially and through the parallel
+sweep engine.  Writes ``BENCH_sim.json`` (repo root by default) so the
+performance trajectory is tracked PR over PR:
+
+    PYTHONPATH=src python -m benchmarks.perf_sim [--fast] [--skip-ref]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import random
+import time
+
+from repro.core.events import Op, StepTemplate, ps_resources
+from repro.core.simulator import SimConfig, Simulation
+from repro.core.simulator_ref import ReferenceSimulation
+from repro.core.sweep import default_pool_size, parallel_map, simulate_task
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), os.pardir,
+                           "BENCH_sim.json")
+
+# (name, layers, steps_per_worker): op count is ~4 ops per layer
+SIZES = (("small", 3, 300), ("medium", 16, 120), ("large", 64, 40))
+WORKER_COUNTS = (1, 2, 4, 8)
+
+
+def make_template(layers: int, seed: int = 0) -> StepTemplate:
+    """A PS-training-shaped step: per layer download -> fwd; then reverse
+    bwd -> upload, with the paper's pipeline dependencies."""
+    rng = random.Random(seed)
+    ops = []
+    fwd_prev = None
+    for i in range(layers):
+        dl = len(ops)
+        ops.append(Op(f"dl{i}", "downlink", size=rng.uniform(2e6, 3e7)))
+        deps = (dl,) if fwd_prev is None else (dl, fwd_prev)
+        fwd_prev = len(ops)
+        ops.append(Op(f"fwd{i}", "worker", duration=rng.uniform(.005, .05),
+                      deps=deps))
+    bwd_prev = fwd_prev
+    for i in reversed(range(layers)):
+        bwd = len(ops)
+        ops.append(Op(f"bwd{i}", "worker", duration=rng.uniform(.01, .08),
+                      deps=(bwd_prev,)))
+        bwd_prev = bwd
+        ops.append(Op(f"ul{i}", "uplink", size=rng.uniform(2e6, 3e7),
+                      deps=(bwd,)))
+    return StepTemplate(ops=ops)
+
+
+def make_cfg(steps_per_worker: int, seed: int = 0) -> SimConfig:
+    return SimConfig(resources=ps_resources(1e9), link_policy="http2",
+                     win=2.8e6, steps_per_worker=steps_per_worker,
+                     warmup_steps=10, seed=seed, service_jitter=0.08,
+                     stall_alpha=2e-9, stall_rtt=5e-4)
+
+
+def time_engine(sim_cls, tpls, cfg_fn, num_workers: int, reps: int):
+    best, events, tput = float("inf"), 0, 0.0
+    for rep in range(reps):
+        cfg = cfg_fn(rep)
+        t0 = time.perf_counter()
+        trace = sim_cls(cfg).run(tpls, num_workers)
+        dt = time.perf_counter() - t0
+        best = min(best, dt)
+        events = trace.meta.get("num_events", 0)
+        tput = trace.throughput(32, cfg.warmup_steps)
+    return best, events, tput
+
+
+def run(fast: bool = False, skip_ref: bool = False,
+        out_path: str = DEFAULT_OUT) -> dict:
+    reps = 1 if fast else 3
+    sizes = SIZES[:2] if fast else SIZES
+    workers = WORKER_COUNTS[:3] if fast else WORKER_COUNTS
+    out = {"bench": "perf_sim", "cpus": default_pool_size(),
+           "fast": fast, "workloads": [], "sweep": {}}
+
+    print("workload,ops,W,engine_s,ref_s,speedup,events,events_per_s")
+    for name, layers, steps in sizes:
+        tpls = [make_template(layers, seed=s) for s in range(3)]
+        nops = len(tpls[0].ops)
+        sp = steps // 4 if fast else steps
+        for w in workers:
+            def cfg_fn(rep):
+                return make_cfg(sp, seed=rep)
+            t_new, events, tput_new = time_engine(
+                Simulation, tpls, cfg_fn, w, reps)
+            if skip_ref:
+                t_ref = tput_ref = None
+            else:
+                t_ref, _e, tput_ref = time_engine(
+                    ReferenceSimulation, tpls, cfg_fn, w, reps)
+            rec = {"workload": name, "ops_per_step": nops, "W": w,
+                   "steps_per_worker": sp,
+                   "engine_s": t_new, "ref_s": t_ref,
+                   "speedup": (t_ref / t_new) if t_ref else None,
+                   "events": events, "events_per_s": events / t_new,
+                   "throughput": tput_new, "throughput_ref": tput_ref}
+            out["workloads"].append(rec)
+            print(f"{name},{nops},{w},{t_new:.3f},"
+                  f"{t_ref if t_ref is None else round(t_ref, 3)},"
+                  f"{rec['speedup'] and round(rec['speedup'], 2)},"
+                  f"{events},{events / t_new:.0f}", flush=True)
+
+    # figure-equivalent sweep: n_runs seeded sims per worker count, serial
+    # in-process vs fanned across the pool (what the fig13/14/20/25
+    # drivers now do)
+    name, layers, steps = sizes[min(1, len(sizes) - 1)]
+    tpls = [make_template(layers, seed=s) for s in range(3)]
+    sp = steps // 4 if fast else steps
+    tasks = [(make_cfg(sp, seed=101 * i + w), tpls, w, 32, 10)
+             for w in workers for i in range(3)]
+    t0 = time.perf_counter()
+    serial = [simulate_task(t) for t in tasks]
+    t_serial = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    par = parallel_map(simulate_task, tasks)
+    t_par = time.perf_counter() - t0
+    assert par == serial, "parallel sweep must be bit-identical to serial"
+    out["sweep"] = {"workload": name, "tasks": len(tasks),
+                    "serial_s": t_serial, "parallel_s": t_par,
+                    "speedup": t_serial / t_par}
+    print(f"# sweep: {len(tasks)} tasks serial {t_serial:.2f}s "
+          f"parallel {t_par:.2f}s ({t_serial / t_par:.2f}x on "
+          f"{out['cpus']} cores)")
+
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"# wrote {os.path.abspath(out_path)}")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="CI-sized run")
+    ap.add_argument("--skip-ref", action="store_true",
+                    help="skip the (slow) reference-engine baseline")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+    run(fast=args.fast, skip_ref=args.skip_ref, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

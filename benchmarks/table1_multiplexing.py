@@ -13,6 +13,7 @@ from repro.core.events import ps_resources
 from repro.core.overhead import preprocess_recorded_step
 from repro.core.predictor import PredictionRun
 from repro.core.simulator import SimConfig, Simulation
+from repro.core.sweep import parallel_map
 
 from .common import pct, row, save_json
 
@@ -54,25 +55,31 @@ def stream_endtime_errors(run: PredictionRun) -> list:
     return errs
 
 
+def _case_task(args: tuple) -> dict:
+    """One (platform, dnn) cell — self-contained for the process pool."""
+    plat, dnn, batch, profile_steps = args
+    r = PredictionRun(dnn=dnn, batch_size=batch, platform=plat,
+                      profile_steps=profile_steps)
+    r.prepare()
+    errs = np.array(stream_endtime_errors(r))
+    return {"dnn": dnn, "platform": plat,
+            "avg": float(errs.mean()),
+            "median": float(np.median(errs)),
+            "p95": float(np.percentile(errs, 95)),
+            "max": float(errs.max()), "n": int(errs.size)}
+
+
 def run(models=MODELS, platforms=PLATFORMS, batch=8,
         profile_steps=60) -> dict:
     out = {"table": "table1", "rows": []}
     print("table,dnn,platform,avg,median,p95,max,n")
-    for plat in platforms:
-        for dnn in models:
-            r = PredictionRun(dnn=dnn, batch_size=batch, platform=plat,
-                              profile_steps=profile_steps)
-            r.prepare()
-            errs = np.array(stream_endtime_errors(r))
-            rec = {"dnn": dnn, "platform": plat,
-                   "avg": float(errs.mean()),
-                   "median": float(np.median(errs)),
-                   "p95": float(np.percentile(errs, 95)),
-                   "max": float(errs.max()), "n": int(errs.size)}
-            out["rows"].append(rec)
-            print(row("table1", dnn, plat, pct(rec["avg"]),
-                      pct(rec["median"]), pct(rec["p95"]),
-                      pct(rec["max"]), rec["n"]), flush=True)
+    cases = [(plat, dnn, batch, profile_steps)
+             for plat in platforms for dnn in models]
+    for rec in parallel_map(_case_task, cases):
+        out["rows"].append(rec)
+        print(row("table1", rec["dnn"], rec["platform"], pct(rec["avg"]),
+                  pct(rec["median"]), pct(rec["p95"]),
+                  pct(rec["max"]), rec["n"]), flush=True)
     save_json("table1_multiplexing", out)
     return out
 

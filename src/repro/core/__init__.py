@@ -7,14 +7,19 @@ from .events import (COMPUTE, LINK, Op, ResourceSpec, StepTemplate, Trace,
 from .overhead import (OverheadModel, RecordedOp, RecordedStep,
                        preprocess_profile, preprocess_recorded_step)
 from .paper_models import PAPER_DNNS, PLATFORMS
-from .predictor import PredictionRun, calibrate_overhead, prediction_error, sweep
+from .predictor import PredictionRun, calibrate_overhead, prediction_error
 from .simulator import SimConfig, Simulation, predict_throughput
+# NOTE: ``repro.core.sweep`` is the parallel sweep-engine MODULE; the
+# figure-sweep convenience function lives at ``repro.core.predictor.sweep``.
+from .sweep import (measure_many, parallel_map, predict_many,
+                    sweep_parallel)
 
 __all__ = [
     "BandwidthModel", "EqualShareModel", "COMPUTE", "LINK", "Op",
     "ResourceSpec", "StepTemplate", "Trace", "ps_resources", "OverheadModel",
     "RecordedOp", "RecordedStep", "preprocess_profile",
     "preprocess_recorded_step", "PAPER_DNNS", "PLATFORMS", "PredictionRun",
-    "calibrate_overhead", "prediction_error", "sweep", "SimConfig",
-    "Simulation", "predict_throughput",
+    "calibrate_overhead", "prediction_error", "SimConfig",
+    "Simulation", "predict_throughput", "measure_many", "parallel_map",
+    "predict_many", "sweep_parallel",
 ]

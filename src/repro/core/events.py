@@ -157,7 +157,7 @@ class StepTemplate:
 # ---------------------------------------------------------------------------
 
 
-@dataclass
+@dataclass(slots=True)
 class LiveOp:
     """An op instance bound to a worker inside a running step."""
 
@@ -194,13 +194,18 @@ class LiveOp:
         return self.template.name
 
 
-@dataclass
+@dataclass(slots=True)
 class Chunk:
     """A schedulable portion of a LiveOp (HTTP/2 WIN chunking)."""
 
     op: LiveOp
     remaining: float
     is_last: bool
+    # Service-start order, assigned by the simulator when the chunk enters
+    # service.  Simultaneous completions are processed in start order, which
+    # reproduces the reference engine's running-dict insertion order (and
+    # hence its RNG draw sequence) exactly.
+    seq: int = -1
 
     @property
     def worker(self) -> int:

@@ -21,7 +21,7 @@ from repro.core.events import StepTemplate, ps_resources
 from repro.core.overhead import (OverheadModel, RecordedStep,
                                  preprocess_profile)
 from repro.core.paper_models import PAPER_DNNS, PLATFORMS, Platform
-from repro.core.simulator import SimConfig, Simulation
+from repro.core.simulator import SimConfig
 from repro.emulator.cluster import (measure_throughput, probe_parse_overheads,
                                     profile_single_worker)
 
@@ -92,34 +92,46 @@ class PredictionRun:
             service_jitter=plat.noise_bandwidth,
         )
 
-    def predict(self, num_workers: int, n_runs: int = 3) -> float:
+    def prediction_tasks(self, num_workers: int, n_runs: int = 3) -> list:
+        """The fully-seeded simulation tasks behind :meth:`predict`.
+
+        Each task is self-contained (its own ``SimConfig`` with its own
+        seed), so running them serially in-process or fanned across a
+        process pool (``repro.core.sweep``) gives bit-identical results.
+        """
+        if not self.sim_steps_templates:
+            self.prepare()
+        tasks = []
+        for i in range(n_runs):
+            cfg = self._sim_cfg()
+            cfg.seed = cfg.seed + 101 * i
+            tasks.append((cfg, self.sim_steps_templates, num_workers,
+                          self.batch_size, self.warmup_steps))
+        return tasks
+
+    def predict(self, num_workers: int, n_runs: int = 3,
+                parallel: bool = False) -> float:
         """Our method's predicted examples/s for W workers.
 
         Averages ``n_runs`` independent simulation runs (paper §3.4:
         "multiple runs can be performed in parallel on separate cores") —
         small-W configurations are metastable (partial interleaving,
-        Fig. 16), so a single run has high variance.
+        Fig. 16), so a single run has high variance.  ``parallel=True``
+        fans the runs across cores (same seeds, same mean); sweeping many
+        worker counts is better served by ``sweep.predict_many``.
         """
-        if not self.sim_steps_templates:
-            self.prepare()
-        outs = []
-        for i in range(n_runs):
-            cfg = self._sim_cfg()
-            cfg.seed = cfg.seed + 101 * i
-            sim = Simulation(cfg)
-            trace = sim.run(self.sim_steps_templates, num_workers)
-            outs.append(trace.throughput(self.batch_size,
-                                         self.warmup_steps))
+        from repro.core.sweep import parallel_map, simulate_task
+        tasks = self.prediction_tasks(num_workers, n_runs)
+        outs = parallel_map(simulate_task, tasks, parallel=parallel)
         return sum(outs) / len(outs)
 
     def measure_mean(self, num_workers: int, steps: int = 150,
-                     n_runs: int = 3) -> float:
+                     n_runs: int = 3, parallel: bool = False) -> float:
         """Ensemble-mean ground truth (the emulator, like the real cluster,
         is itself seed-noisy at small W)."""
-        outs = [self.measure(num_workers, steps=steps,
-                             seed_offset=1000 + 37 * i)
-                for i in range(n_runs)]
-        return sum(outs) / len(outs)
+        from repro.core.sweep import measure_many
+        return measure_many(self, [num_workers], steps=steps, n_runs=n_runs,
+                            parallel=parallel)[num_workers]
 
     def predict_baseline(self, num_workers: int, method: str) -> float:
         if not self.profile:
@@ -153,15 +165,15 @@ def prediction_error(predicted: float, measured: float) -> float:
 
 
 def sweep(run: PredictionRun, workers: Sequence[int],
-          measure_steps: int = 100) -> Dict[str, List[float]]:
-    """Predicted vs measured curves (one paper sub-figure)."""
+          measure_steps: int = 100,
+          parallel: bool = True) -> Dict[str, List[float]]:
+    """Predicted vs measured curves (one paper sub-figure).
+
+    All (worker-count, seed) simulation and measurement tasks are fanned
+    across cores by ``repro.core.sweep`` (deterministic per-task seeding:
+    identical output to the historical serial loop).
+    """
+    from repro.core.sweep import sweep_parallel
     run.prepare()
-    pred, meas, errs = [], [], []
-    for w in workers:
-        p = run.predict(w)
-        m = run.measure(w, steps=measure_steps)
-        pred.append(p)
-        meas.append(m)
-        errs.append(prediction_error(p, m))
-    return {"workers": list(workers), "predicted": pred, "measured": meas,
-            "error": errs}
+    return sweep_parallel(run, workers, measure_steps=measure_steps,
+                          parallel=parallel)

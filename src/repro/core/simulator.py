@@ -1,26 +1,35 @@
-"""Discrete-event simulation for synthetic trace generation (Algorithm 3.1).
+"""Incremental event-calendar simulation for synthetic trace generation.
 
-Faithful implementation of the paper's simulator:
+Same fluid semantics as the paper's Algorithm 3.1 (and as the frozen seed
+engine in ``simulator_ref.py`` — the golden-trace tests assert equivalence),
+but with the steady-state per-event cost reduced from O(running chunks) to
+O(log n):
 
-  * each worker replays SGD steps sampled with replacement from the profiled
-    step set;
-  * every op uses one resource; link resources are processor-shared among
-    active workers according to a :class:`BandwidthModel`; compute resources
-    are private per worker;
-  * per (worker, resource) at most ONE chunk is in service; the per-pair
-    scheduler (HTTP/2 WIN model, FIFO, or enforced order) decides chunking
-    and service order;
-  * when the last chunk of an op completes, dependent ops whose prerequisites
-    are all met join their scheduler, possibly starting immediately;
-  * when a worker has no pending chunks left, its step is complete and a new
-    step is sampled (until ``steps_per_worker`` are done).
+  * **Per-link virtual-service clocks** (the standard processor-sharing
+    trick).  Under equal sharing every active connection on a link receives
+    service at the same per-connection rate ``B / n``, so the link keeps a
+    cumulative attained-service clock ``V`` and each chunk a fixed target
+    ``v_target = V(start) + work``: the chunk completes when ``V`` reaches
+    ``v_target``, *regardless of how the rate changed in between*.  Rate
+    changes (a worker joining or leaving the link) only re-project the
+    link's earliest completion onto the real-time axis — no per-chunk state
+    is ever touched.
+  * **Lazy rate epochs.**  The global calendar holds at most one projection
+    per link, tagged with the link's rate epoch; stale projections are
+    discarded on pop instead of being searched for and removed.
+  * **Incremental share recomputation.**  The general bandwidth model
+    (max-min water-filling with NIC coupling, used for M >= 2 parameter
+    servers) cannot guarantee uniform per-connection rates within a link,
+    so those runs fall back to per-connection projections — but shares are
+    recomputed only when some link's active-worker set actually changes,
+    never on events that leave the active sets untouched (e.g. a chunk
+    completion whose connection immediately starts its next queued chunk).
+  * **Batched calendar pops.**  Simultaneous completions and due rejoins
+    are drained in one pop and processed in chunk-start order, matching the
+    reference engine's batch semantics (and its RNG draw order) exactly.
 
-Differences from the pseudocode, for efficiency/robustness (results are
-identical): we keep the set of *running* chunks (one per busy pair) and only
-re-evaluate rates on events; simultaneous completions are processed in one
-batch; an explicit per-pair busy flag replaces the pseudocode's
-"scheduler non-empty" proxy, which avoids double-starting a resource when a
-dependent lands on the pair that just finished.
+Compute resources are private (rate 1), so their completions enter the
+calendar with exact times and are never invalidated.
 """
 from __future__ import annotations
 
@@ -28,15 +37,32 @@ import heapq
 import itertools
 import math
 import random
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Mapping, Optional, Sequence, Set, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from .bandwidth import BandwidthModel, EqualShareModel
-from .events import (COMPUTE, LINK, Chunk, LiveOp, Op, ResourceSpec,
-                     StepTemplate, Trace)
+from .events import (LINK, Chunk, LiveOp, ResourceSpec, StepTemplate, Trace)
 from .schedulers import FifoScheduler, Scheduler, make_link_scheduler
 
-_EPS = 1e-9  # relative work epsilon
+# A chunk completes when its remaining work is within this of zero — the
+# same effective threshold as the reference engine's per-event test
+# ``remaining <= _EPS * max(|remaining|, 1)``.
+_WORK_EPS = 1e-9
+# Batch windows when draining the calendar (seconds).  Compute resources
+# run at rate 1, so the reference engine's work epsilon is 1e-9 *seconds*
+# there; rejoins use the reference's 1e-15 slack; link projections join a
+# batch on exact ties, up to a few ulp of the current time (projection
+# arithmetic perturbs genuinely tied completions by ~1 ulp of t).
+_EPS_COMPUTE = 1e-9
+_EPS_LINK = 1e-15        # + t * _EPS_LINK_REL at drain time
+_EPS_LINK_REL = 1e-15
+_EPS_REJOIN = 1e-15
+
+# Calendar entry kinds (entries are (time, seq, kind, a, b) tuples).
+_K_REJOIN = 0    # a = LiveOp to re-queue
+_K_COMPUTE = 1   # a = (worker, res) key, b = Chunk; exact, never stale
+_K_LINK = 2      # a = link name, b = rate epoch; stale if epoch moved on
+_K_CONN = 3      # a = (worker, res) key, b = conn epoch (general mode)
 
 
 @dataclass
@@ -72,6 +98,26 @@ class SimConfig:
             self.bandwidth_model = EqualShareModel()
 
 
+class _LinkState:
+    """Incremental processor-sharing state for one link resource."""
+
+    __slots__ = ("bandwidth", "V", "rate", "t_mat", "heap", "epoch", "active")
+
+    def __init__(self, bandwidth: float):
+        self.bandwidth = bandwidth
+        self.V = 0.0       # cumulative per-connection attained service
+        self.rate = 0.0    # current per-connection service rate (work/s)
+        self.t_mat = 0.0   # time V was last materialized
+        self.heap: List[Tuple[float, int, Tuple[int, str], Chunk]] = []
+        self.epoch = 0     # bumped whenever rate / membership changes
+        self.active: Set[int] = set()
+
+    def materialize(self, t: float) -> None:
+        if t > self.t_mat:
+            self.V += self.rate * (t - self.t_mat)
+            self.t_mat = t
+
+
 class Simulation:
     """One synthetic-trace generation run (GenerateTrace in the paper)."""
 
@@ -92,132 +138,307 @@ class Simulation:
         if not steps:
             raise ValueError("need at least one profiled step")
         cfg = self.cfg
+        resources = self.resources
+        rng = self.rng
         trace = Trace()
+        # Uniform per-link rates hold exactly for the equal-share rule; any
+        # other model may split a link unevenly (NIC coupling) and uses the
+        # per-connection fallback.
+        uniform = type(cfg.bandwidth_model) is EqualShareModel
 
         workers = range(num_workers)
         scheds: Dict[Tuple[int, str], Scheduler] = {}
         for w in workers:
-            for rname, spec in self.resources.items():
+            for rname, spec in resources.items():
                 if spec.kind == LINK:
                     scheds[(w, rname)] = make_link_scheduler(cfg.link_policy, cfg.win)
                 else:
                     scheds[(w, rname)] = FifoScheduler()
 
-        running: Dict[Tuple[int, str], Chunk] = {}
-        active: Dict[str, Set[int]] = {
-            r: set() for r, s in self.resources.items() if s.kind == LINK
+        links: Dict[str, _LinkState] = {
+            r: _LinkState(s.bandwidth)
+            for r, s in resources.items() if s.kind == LINK
         }
+        is_link = {r: s.kind == LINK for r, s in resources.items()}
+
+        running: Dict[Tuple[int, str], Chunk] = {}
+        calendar: List[tuple] = []
+        cal_seq = itertools.count()
+        start_seq = itertools.count()
+        uid_counter = itertools.count()
+        rejoin_pending = 0
+        dirty_links: Set[str] = set()   # uniform mode: projections to refresh
+        shares_dirty = False            # general mode: global recompute needed
+        # general mode per-connection service state
+        conn_rate: Dict[Tuple[int, str], float] = {}
+        conn_mtime: Dict[Tuple[int, str], float] = {}
+        conn_epoch: Dict[Tuple[int, str], int] = {}
+        cur_shares: Dict[Tuple[int, str], float] = {}
+
         pending_ops: Dict[int, int] = {w: 0 for w in workers}
         completed: Dict[int, int] = {w: 0 for w in workers}
         sample_idx: Dict[int, int] = {w: 0 for w in workers}
         op_times: List[Tuple[int, int, str, str, float, float]] = []
 
+        stall = cfg.stall_alpha * cfg.win + cfg.stall_rtt
+        jitter_sigma = cfg.service_jitter
+        jitter_mu = -0.5 * jitter_sigma * jitter_sigma
+
+        def apply_service_jitter(chunk: Chunk) -> None:
+            """Lognormal per-chunk link-service jitter (one site; both the
+            fresh-start and next-chunk paths go through _begin_chunk)."""
+            chunk.remaining *= math.exp(rng.gauss(jitter_mu, jitter_sigma))
+
         def next_step(w: int) -> StepTemplate:
             if sample:
-                return steps[self.rng.randrange(len(steps))]
+                return steps[rng.randrange(len(steps))]
             i = sample_idx[w]
             sample_idx[w] += 1
             return steps[i % len(steps)]
 
+        # per-template instantiation cache: work amounts and dependency
+        # edges don't change between steps, so compute them once per run
+        tpl_cache: Dict[int, tuple] = {}
+
         def start_step(w: int, t: float) -> None:
             tpl = next_step(w)
+            cached = tpl_cache.get(id(tpl))
+            if cached is None:
+                works = [op.work(resources) for op in tpl.ops]
+                edges = [(d, i) for i, op in enumerate(tpl.ops)
+                         for d in op.deps]
+                roots = [i for i, op in enumerate(tpl.ops) if not op.deps]
+                cached = (tpl.ops, works, edges, roots)
+                tpl_cache[id(tpl)] = cached
+            ops, works, edges, roots = cached
+            seq = completed[w]
             live: List[LiveOp] = [
-                LiveOp.fresh(op, w, completed[w], self.resources) for op in tpl.ops
+                LiveOp(uid=next(uid_counter), template=op, worker=w,
+                       step_seq=seq, remaining_deps=len(op.deps),
+                       remaining_work=wk)
+                for op, wk in zip(ops, works)
             ]
-            for i, op in enumerate(tpl.ops):
-                for d in op.deps:
-                    live[d].dependents.append(live[i])
+            for d, i in edges:
+                live[d].dependents.append(live[i])
             pending_ops[w] += len(live)
-            for lop in live:
-                if lop.remaining_deps == 0:
-                    enqueue_op(lop, t)
+            for i in roots:
+                enqueue_op(live[i], t)
 
-        def try_start_chunk(w: int, rname: str, t: float) -> None:
-            """If the pair is idle and has queued work, start its next chunk."""
-            if (w, rname) in running:
-                return
-            chunk = scheds[(w, rname)].remove_chunk()
-            if chunk is None:
-                return
-            if cfg.service_jitter > 0 and                     self.resources[rname].kind == LINK:
-                sig = cfg.service_jitter
-                mu = -0.5 * sig * sig
-                chunk.remaining *= math.exp(self.rng.gauss(mu, sig))
-            running[(w, rname)] = chunk
-            if self.resources[rname].kind == LINK:
-                active[rname].add(w)
+        def begin_chunk(key: Tuple[int, str], chunk: Chunk, t: float) -> None:
+            """Place a chunk in service on an idle (worker, resource) pair."""
+            nonlocal shares_dirty
+            w, rname = key
+            if is_link[rname]:
+                if jitter_sigma > 0:
+                    apply_service_jitter(chunk)
+                chunk.seq = next(start_seq)
+                running[key] = chunk
+                link = links[rname]
+                link.materialize(t)
+                if uniform:
+                    link.active.add(w)
+                    heapq.heappush(link.heap,
+                                   (link.V + chunk.remaining, chunk.seq,
+                                    key, chunk))
+                    dirty_links.add(rname)
+                else:
+                    was_active = w in link.active
+                    link.active.add(w)
+                    conn_mtime[key] = t
+                    epoch = conn_epoch.get(key, 0) + 1
+                    conn_epoch[key] = epoch
+                    if was_active and not shares_dirty:
+                        # immediate successor on a still-active connection:
+                        # the active sets are unchanged, so the connection
+                        # keeps its current share — no global recompute
+                        r = cur_shares.get(key, 0.0) * link.bandwidth
+                        conn_rate[key] = r
+                        if r > 0.0:
+                            heapq.heappush(
+                                calendar,
+                                (t + chunk.remaining / r, next(cal_seq),
+                                 _K_CONN, key, epoch))
+                        else:
+                            shares_dirty = True
+                    else:
+                        # real rate assigned by the end-of-batch recompute
+                        conn_rate[key] = 0.0
+                        shares_dirty = True
+            else:
+                chunk.seq = next(start_seq)
+                running[key] = chunk
+                heapq.heappush(calendar,
+                               (t + chunk.remaining, next(cal_seq),
+                                _K_COMPUTE, key, chunk))
             if chunk.op.start_time < 0:
                 chunk.op.start_time = t
 
-        def enqueue_op(lop: LiveOp, t: float) -> None:
-            scheds[(lop.worker, lop.res)].add(lop)
-            try_start_chunk(lop.worker, lop.res, t)
+        def try_start_chunk(w: int, rname: str, t: float) -> None:
+            """If the pair is idle and has queued work, start its next chunk."""
+            key = (w, rname)
+            if key in running:
+                return
+            chunk = scheds[key].remove_chunk()
+            if chunk is not None:
+                begin_chunk(key, chunk, t)
 
-        def rates() -> Dict[Tuple[int, str], float]:
-            shares = cfg.bandwidth_model.shares(
-                {r: ws for r, ws in active.items() if ws}
-            )
-            out: Dict[Tuple[int, str], float] = {}
-            for (w, rname), chunk in running.items():
-                spec = self.resources[rname]
-                if spec.kind == LINK:
-                    out[(w, rname)] = shares.get((w, rname), 0.0) * spec.bandwidth
-                else:
-                    out[(w, rname)] = 1.0
-            return out
+        def enqueue_op(lop: LiveOp, t: float) -> None:
+            rname = lop.template.res
+            scheds[(lop.worker, rname)].add(lop)
+            try_start_chunk(lop.worker, rname, t)
+
+        def entry_valid(e: tuple) -> bool:
+            kind = e[2]
+            if kind == _K_LINK:
+                return links[e[3]].epoch == e[4]
+            if kind == _K_CONN:
+                return conn_epoch.get(e[3], -1) == e[4]
+            return True
+
+        def finalize_batch(t: float) -> None:
+            """Refresh rates/projections for links touched in this batch."""
+            nonlocal shares_dirty
+            if uniform:
+                for rname in dirty_links:
+                    link = links[rname]
+                    link.materialize(t)
+                    n = len(link.active)
+                    # (1/n) * B, not B/n: matches the reference engine's
+                    # share-then-scale arithmetic to the last ulp
+                    link.rate = (1.0 / n) * link.bandwidth if n else 0.0
+                    link.epoch += 1
+                    if link.heap:
+                        dt = (link.heap[0][0] - link.V) / link.rate
+                        heapq.heappush(
+                            calendar,
+                            (t + (dt if dt > 0.0 else 0.0), next(cal_seq),
+                             _K_LINK, rname, link.epoch))
+                dirty_links.clear()
+            elif shares_dirty:
+                cur_shares.clear()
+                cur_shares.update(cfg.bandwidth_model.shares(
+                    {r: l.active for r, l in links.items() if l.active}))
+                shares = cur_shares
+                for key, chunk in running.items():
+                    rname = key[1]
+                    if not is_link[rname]:
+                        continue
+                    r_old = conn_rate[key]
+                    if r_old > 0.0:
+                        chunk.remaining -= r_old * (t - conn_mtime[key])
+                    conn_mtime[key] = t
+                    r_new = shares.get(key, 0.0) * links[rname].bandwidth
+                    conn_rate[key] = r_new
+                    epoch = conn_epoch.get(key, 0) + 1
+                    conn_epoch[key] = epoch
+                    if r_new > 0.0:
+                        rem = chunk.remaining
+                        heapq.heappush(
+                            calendar,
+                            (t + (rem if rem > 0.0 else 0.0) / r_new,
+                             next(cal_seq), _K_CONN, key, epoch))
+                shares_dirty = False
 
         # ---- main loop ----
         t = 0.0
-        rejoins: List[Tuple[float, int, LiveOp]] = []  # stalled remainders
-        _rejoin_seq = itertools.count()
         for w in workers:
             start_step(w, t)
+        finalize_batch(t)
 
         total_steps_target = num_workers * cfg.steps_per_worker
         steps_done = 0
+        n_events = 0   # chunk completions + processed rejoins (for perf stats)
         guard = 0
         max_events = 200 * total_steps_target * max(
             1, max(len(s.ops) for s in steps)
         )
 
-        while (running or rejoins) and steps_done < total_steps_target:
+        while (running or rejoin_pending) and steps_done < total_steps_target:
             guard += 1
             if guard > max_events:
                 raise RuntimeError("simulator event-count guard tripped (livelock?)")
 
-            cur_rates = rates()
-            # time to next completion
-            dt = math.inf
-            for key, chunk in running.items():
-                rate = cur_rates[key]
-                if rate <= 0:
-                    continue
-                dt = min(dt, chunk.remaining / rate)
-            if rejoins:
-                dt = min(dt, rejoins[0][0] - t)
-            if not math.isfinite(dt):
-                raise RuntimeError("no progress possible: all rates zero")
-            dt = max(dt, 0.0)
-            t += dt
+            # -- pop the next valid calendar entry, then drain its batch --
+            while True:
+                if not calendar:
+                    raise RuntimeError("no progress possible: all rates zero")
+                e = heapq.heappop(calendar)
+                if entry_valid(e):
+                    break
+            if e[0] > t:
+                t = e[0]
+            batch = [e]
+            eps_link = _EPS_LINK + t * _EPS_LINK_REL
+            while calendar:
+                e2 = calendar[0]
+                kind = e2[2]
+                if kind == _K_REJOIN:
+                    eps = _EPS_REJOIN
+                elif kind == _K_COMPUTE:
+                    eps = _EPS_COMPUTE
+                else:
+                    eps = eps_link
+                if e2[0] > t + eps:
+                    break
+                heapq.heappop(calendar)
+                if entry_valid(e2):
+                    batch.append(e2)
 
-            # stalled remainders whose WINDOW_UPDATE has arrived
-            while rejoins and rejoins[0][0] <= t + 1e-15:
-                _, _, lop = heapq.heappop(rejoins)
+            # -- due rejoins first (reference engine order) --
+            for e2 in batch:
+                if e2[2] != _K_REJOIN:
+                    continue
+                rejoin_pending -= 1
+                lop = e2[3]
                 scheds[(lop.worker, lop.res)].add(lop)
                 try_start_chunk(lop.worker, lop.res, t)
 
-            finished: List[Tuple[int, str]] = []
-            for key, chunk in running.items():
-                rate = cur_rates.get(key)
-                if rate is None:
-                    continue  # started by a rejoin event at time t
-                chunk.remaining -= rate * dt
-                work0 = max(abs(chunk.remaining), 1.0)
-                if chunk.remaining <= _EPS * work0 or chunk.remaining <= 1e-12:
-                    finished.append(key)
+            # -- collect completions, in chunk-start order --
+            completions: List[Tuple[int, Tuple[int, str], Chunk]] = []
+            drained_links: Set[str] = set()
+            for e2 in batch:
+                kind = e2[2]
+                if kind == _K_COMPUTE:
+                    completions.append((e2[4].seq, e2[3], e2[4]))
+                elif kind == _K_LINK:
+                    rname = e2[3]
+                    if rname in drained_links:
+                        continue
+                    drained_links.add(rname)
+                    link = links[rname]
+                    link.materialize(t)
+                    lheap = link.heap
+                    # relative term: V is cumulative over the whole run, so
+                    # a fixed epsilon would eventually drop below one ulp of
+                    # V and a due chunk could never be recognized complete
+                    v_lim = link.V + _WORK_EPS + link.V * 1e-12
+                    popped = False
+                    while lheap and lheap[0][0] <= v_lim:
+                        _v, cseq, key, chunk = heapq.heappop(lheap)
+                        completions.append((cseq, key, chunk))
+                        popped = True
+                    if not popped and lheap and link.rate > 0.0:
+                        # residual virtual work implies a time step below
+                        # one ulp of t: no representable progress is
+                        # possible, so the head chunk is due now (the
+                        # reference engine's exact per-chunk decrement
+                        # reaches zero here too)
+                        dt_min = (lheap[0][0] - link.V) / link.rate
+                        if t + dt_min <= t:
+                            _v, cseq, key, chunk = heapq.heappop(lheap)
+                            completions.append((cseq, key, chunk))
+                    dirty_links.add(rname)
+                elif kind == _K_CONN:
+                    key = e2[3]
+                    chunk = running[key]
+                    completions.append((chunk.seq, key, chunk))
+                    conn_epoch[key] += 1   # invalidate residual projections
+                    del conn_rate[key], conn_mtime[key]
+            completions.sort()
+            n_events += len(completions)
 
-            for key in finished:
-                chunk = running.pop(key)
+            for _cseq, key, chunk in completions:
+                del running[key]
                 w, rname = key
                 lop = chunk.op
                 if cfg.record_trace:
@@ -226,12 +447,13 @@ class Simulation:
                 if not chunk.is_last:
                     # preempted stream rejoins the back of its queue after
                     # the receiver consumes the burst (WINDOW_UPDATE stall)
-                    stall = cfg.stall_alpha * cfg.win + cfg.stall_rtt
                     if stall > 0.0:
-                        heapq.heappush(
-                            rejoins, (t + stall, next(_rejoin_seq), lop))
+                        rejoin_pending += 1
+                        heapq.heappush(calendar,
+                                       (t + stall, next(cal_seq),
+                                        _K_REJOIN, lop, None))
                     else:
-                        scheds[(w, rname)].add(lop)
+                        scheds[key].add(lop)
                 if chunk.is_last:
                     lop.end_time = t
                     pending_ops[w] -= 1
@@ -245,34 +467,33 @@ class Simulation:
                 # next chunk on this pair (the dependent may already have
                 # re-marked the pair busy via enqueue_op -> try_start_chunk)
                 if key not in running:
-                    nxt = scheds[(w, rname)].remove_chunk()
+                    nxt = scheds[key].remove_chunk()
                     if nxt is not None:
-                        if cfg.service_jitter > 0 and                                 self.resources[rname].kind == LINK:
-                            sig = cfg.service_jitter
-                            mu = -0.5 * sig * sig
-                            nxt.remaining *= math.exp(self.rng.gauss(mu, sig))
-                        running[key] = nxt
-                        if nxt.op.start_time < 0:
-                            nxt.op.start_time = t
-                    elif self.resources[rname].kind == LINK:
-                        active[rname].discard(w)
+                        begin_chunk(key, nxt, t)
+                    elif is_link[rname]:
+                        links[rname].active.discard(w)
+                        if uniform:
+                            dirty_links.add(rname)
+                        else:
+                            shares_dirty = True
 
-                # step complete?
-                if pending_ops[w] == 0 and not any(
-                    scheds[(w, r)] for r in self.resources
-                ) and not any(
-                    (w, r) in running for r in self.resources
-                ):
+                # step complete?  (pending_ops == 0 implies the worker's
+                # schedulers are empty and nothing of its is running: every
+                # queued/running chunk belongs to a still-live op)
+                if pending_ops[w] == 0:
                     completed[w] += 1
                     steps_done += 1
                     trace.complete_step(w, completed[w] - 1, t)
                     if completed[w] < cfg.steps_per_worker:
                         start_step(w, t)
 
+            finalize_batch(t)
+
         trace.meta = {  # type: ignore[attr-defined]
             "num_workers": num_workers,
             "steps_per_worker": cfg.steps_per_worker,
             "sim_end_time": t,
+            "num_events": n_events,
         }
         if cfg.record_op_times:
             trace.op_times = op_times  # type: ignore[attr-defined]

@@ -1,0 +1,255 @@
+"""Reference implementation of the discrete-event simulator (frozen seed).
+
+This is the original O(events x running-chunks) engine, kept verbatim as
+the semantic oracle for the incremental event-calendar engine in
+``simulator.py``: the golden-trace equivalence tests
+(``tests/test_engine_equivalence.py``) run both engines on identical seeds
+and assert matching traces.  Do not optimize this module; it exists to stay
+slow and obviously correct.  It can be deleted once the calendar engine has
+survived a few PRs (regenerated fixtures would replace it).
+
+Faithful implementation of the paper's simulator:
+
+  * each worker replays SGD steps sampled with replacement from the profiled
+    step set;
+  * every op uses one resource; link resources are processor-shared among
+    active workers according to a :class:`BandwidthModel`; compute resources
+    are private per worker;
+  * per (worker, resource) at most ONE chunk is in service; the per-pair
+    scheduler (HTTP/2 WIN model, FIFO, or enforced order) decides chunking
+    and service order;
+  * when the last chunk of an op completes, dependent ops whose prerequisites
+    are all met join their scheduler, possibly starting immediately;
+  * when a worker has no pending chunks left, its step is complete and a new
+    step is sampled (until ``steps_per_worker`` are done).
+
+Differences from the pseudocode, for efficiency/robustness (results are
+identical): we keep the set of *running* chunks (one per busy pair) and only
+re-evaluate rates on events; simultaneous completions are processed in one
+batch; an explicit per-pair busy flag replaces the pseudocode's
+"scheduler non-empty" proxy, which avoids double-starting a resource when a
+dependent lands on the pair that just finished.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+import random
+from typing import Dict, List, Sequence, Set, Tuple
+
+from .events import LINK, Chunk, LiveOp, StepTemplate, Trace
+from .schedulers import FifoScheduler, Scheduler, make_link_scheduler
+
+from .simulator import SimConfig
+
+_EPS = 1e-9  # relative work epsilon
+
+
+class ReferenceSimulation:
+    """One synthetic-trace generation run (GenerateTrace in the paper)."""
+
+    def __init__(self, cfg: SimConfig):
+        self.cfg = cfg
+        self.resources = cfg.resources
+        self.rng = random.Random(cfg.seed)
+
+    # -- public API ---------------------------------------------------------
+
+    def run(self, steps: Sequence[StepTemplate], num_workers: int,
+            sample: bool = True) -> Trace:
+        """Generate a synthetic trace for ``num_workers`` workers.
+
+        ``sample=True`` draws steps with replacement (paper default);
+        ``sample=False`` cycles deterministically (useful for tests).
+        """
+        if not steps:
+            raise ValueError("need at least one profiled step")
+        cfg = self.cfg
+        trace = Trace()
+
+        workers = range(num_workers)
+        scheds: Dict[Tuple[int, str], Scheduler] = {}
+        for w in workers:
+            for rname, spec in self.resources.items():
+                if spec.kind == LINK:
+                    scheds[(w, rname)] = make_link_scheduler(cfg.link_policy, cfg.win)
+                else:
+                    scheds[(w, rname)] = FifoScheduler()
+
+        running: Dict[Tuple[int, str], Chunk] = {}
+        active: Dict[str, Set[int]] = {
+            r: set() for r, s in self.resources.items() if s.kind == LINK
+        }
+        pending_ops: Dict[int, int] = {w: 0 for w in workers}
+        completed: Dict[int, int] = {w: 0 for w in workers}
+        sample_idx: Dict[int, int] = {w: 0 for w in workers}
+        op_times: List[Tuple[int, int, str, str, float, float]] = []
+
+        def next_step(w: int) -> StepTemplate:
+            if sample:
+                return steps[self.rng.randrange(len(steps))]
+            i = sample_idx[w]
+            sample_idx[w] += 1
+            return steps[i % len(steps)]
+
+        def start_step(w: int, t: float) -> None:
+            tpl = next_step(w)
+            live: List[LiveOp] = [
+                LiveOp.fresh(op, w, completed[w], self.resources) for op in tpl.ops
+            ]
+            for i, op in enumerate(tpl.ops):
+                for d in op.deps:
+                    live[d].dependents.append(live[i])
+            pending_ops[w] += len(live)
+            for lop in live:
+                if lop.remaining_deps == 0:
+                    enqueue_op(lop, t)
+
+        def try_start_chunk(w: int, rname: str, t: float) -> None:
+            """If the pair is idle and has queued work, start its next chunk."""
+            if (w, rname) in running:
+                return
+            chunk = scheds[(w, rname)].remove_chunk()
+            if chunk is None:
+                return
+            if cfg.service_jitter > 0 and                     self.resources[rname].kind == LINK:
+                sig = cfg.service_jitter
+                mu = -0.5 * sig * sig
+                chunk.remaining *= math.exp(self.rng.gauss(mu, sig))
+            running[(w, rname)] = chunk
+            if self.resources[rname].kind == LINK:
+                active[rname].add(w)
+            if chunk.op.start_time < 0:
+                chunk.op.start_time = t
+
+        def enqueue_op(lop: LiveOp, t: float) -> None:
+            scheds[(lop.worker, lop.res)].add(lop)
+            try_start_chunk(lop.worker, lop.res, t)
+
+        def rates() -> Dict[Tuple[int, str], float]:
+            shares = cfg.bandwidth_model.shares(
+                {r: ws for r, ws in active.items() if ws}
+            )
+            out: Dict[Tuple[int, str], float] = {}
+            for (w, rname), chunk in running.items():
+                spec = self.resources[rname]
+                if spec.kind == LINK:
+                    out[(w, rname)] = shares.get((w, rname), 0.0) * spec.bandwidth
+                else:
+                    out[(w, rname)] = 1.0
+            return out
+
+        # ---- main loop ----
+        t = 0.0
+        rejoins: List[Tuple[float, int, LiveOp]] = []  # stalled remainders
+        _rejoin_seq = itertools.count()
+        for w in workers:
+            start_step(w, t)
+
+        total_steps_target = num_workers * cfg.steps_per_worker
+        steps_done = 0
+        guard = 0
+        max_events = 200 * total_steps_target * max(
+            1, max(len(s.ops) for s in steps)
+        )
+
+        while (running or rejoins) and steps_done < total_steps_target:
+            guard += 1
+            if guard > max_events:
+                raise RuntimeError("simulator event-count guard tripped (livelock?)")
+
+            cur_rates = rates()
+            # time to next completion
+            dt = math.inf
+            for key, chunk in running.items():
+                rate = cur_rates[key]
+                if rate <= 0:
+                    continue
+                dt = min(dt, chunk.remaining / rate)
+            if rejoins:
+                dt = min(dt, rejoins[0][0] - t)
+            if not math.isfinite(dt):
+                raise RuntimeError("no progress possible: all rates zero")
+            dt = max(dt, 0.0)
+            t += dt
+
+            # stalled remainders whose WINDOW_UPDATE has arrived
+            while rejoins and rejoins[0][0] <= t + 1e-15:
+                _, _, lop = heapq.heappop(rejoins)
+                scheds[(lop.worker, lop.res)].add(lop)
+                try_start_chunk(lop.worker, lop.res, t)
+
+            finished: List[Tuple[int, str]] = []
+            for key, chunk in running.items():
+                rate = cur_rates.get(key)
+                if rate is None:
+                    continue  # started by a rejoin event at time t
+                chunk.remaining -= rate * dt
+                work0 = max(abs(chunk.remaining), 1.0)
+                if chunk.remaining <= _EPS * work0 or chunk.remaining <= 1e-12:
+                    finished.append(key)
+
+            for key in finished:
+                chunk = running.pop(key)
+                w, rname = key
+                lop = chunk.op
+                if cfg.record_trace:
+                    trace.add(w, rname, lop.name, lop.step_seq,
+                              lop.start_time, t)
+                if not chunk.is_last:
+                    # preempted stream rejoins the back of its queue after
+                    # the receiver consumes the burst (WINDOW_UPDATE stall)
+                    stall = cfg.stall_alpha * cfg.win + cfg.stall_rtt
+                    if stall > 0.0:
+                        heapq.heappush(
+                            rejoins, (t + stall, next(_rejoin_seq), lop))
+                    else:
+                        scheds[(w, rname)].add(lop)
+                if chunk.is_last:
+                    lop.end_time = t
+                    pending_ops[w] -= 1
+                    if cfg.record_op_times:
+                        op_times.append((w, lop.step_seq, lop.name, rname,
+                                         lop.start_time, t))
+                    for dep in lop.dependents:
+                        dep.remaining_deps -= 1
+                        if dep.remaining_deps == 0:
+                            enqueue_op(dep, t)
+                # next chunk on this pair (the dependent may already have
+                # re-marked the pair busy via enqueue_op -> try_start_chunk)
+                if key not in running:
+                    nxt = scheds[(w, rname)].remove_chunk()
+                    if nxt is not None:
+                        if cfg.service_jitter > 0 and                                 self.resources[rname].kind == LINK:
+                            sig = cfg.service_jitter
+                            mu = -0.5 * sig * sig
+                            nxt.remaining *= math.exp(self.rng.gauss(mu, sig))
+                        running[key] = nxt
+                        if nxt.op.start_time < 0:
+                            nxt.op.start_time = t
+                    elif self.resources[rname].kind == LINK:
+                        active[rname].discard(w)
+
+                # step complete?
+                if pending_ops[w] == 0 and not any(
+                    scheds[(w, r)] for r in self.resources
+                ) and not any(
+                    (w, r) in running for r in self.resources
+                ):
+                    completed[w] += 1
+                    steps_done += 1
+                    trace.complete_step(w, completed[w] - 1, t)
+                    if completed[w] < cfg.steps_per_worker:
+                        start_step(w, t)
+
+        trace.meta = {  # type: ignore[attr-defined]
+            "num_workers": num_workers,
+            "steps_per_worker": cfg.steps_per_worker,
+            "sim_end_time": t,
+        }
+        if cfg.record_op_times:
+            trace.op_times = op_times  # type: ignore[attr-defined]
+        return trace
+
+

@@ -1,0 +1,249 @@
+"""Parallel sweep engine: fan (worker-count, seed) runs across CPU cores.
+
+The paper's pitch (§3.4, §4.5) is that profiling once and *simulating* every
+what-if configuration is orders of magnitude cheaper than measuring on a
+real cluster — and that "multiple runs can be performed in parallel on
+separate cores".  This module is that sentence made concrete: it takes the
+cross product of worker counts and per-run seeds that a figure sweep needs,
+ships each fully-seeded task to a process pool, and reassembles results in
+task order, so
+
+    serial result == parallel result   (bit-for-bit, for fixed seeds)
+
+holds by construction: every task carries its own ``SimConfig`` (seed
+included) or emulator seed, and no RNG state is shared across tasks.
+
+Three layers:
+
+  * :func:`parallel_map` — deterministic ordered pool map with a serial
+    fallback (used directly by ``launch/whatif.py`` and ``benchmarks/``);
+  * :func:`predict_many` / :func:`measure_many` — fan a
+    :class:`~repro.core.predictor.PredictionRun`'s simulation (resp.
+    emulator ground-truth) runs for many worker counts across the pool;
+  * :func:`sweep_parallel` — a full predicted-vs-measured figure sweep
+    (the parallel replacement for ``predictor.sweep``): all simulation and
+    measurement tasks for all worker counts share ONE pool so cores stay
+    busy across the whole figure, not per data point.
+
+Set ``REPRO_SWEEP_SERIAL=1`` to force in-process execution (debugging,
+profiling, or environments where fork is unavailable).
+"""
+from __future__ import annotations
+
+import multiprocessing
+import os
+import sys
+import threading
+from concurrent.futures import ProcessPoolExecutor
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.simulator import SimConfig, Simulation
+
+__all__ = [
+    "parallel_map", "predict_many", "measure_many", "sweep_parallel",
+    "simulate_task", "default_pool_size",
+]
+
+
+def default_pool_size() -> int:
+    return max(1, os.cpu_count() or 1)
+
+
+def _serial_forced() -> bool:
+    return os.environ.get("REPRO_SWEEP_SERIAL", "") not in ("", "0")
+
+
+def _pool_context():
+    """Worker-process start method.
+
+    Plain fork is cheapest but unsafe from a multithreaded parent: forking
+    can clone a locked mutex into the child (CPython warns about exactly
+    this once JAX's thread pools exist).  So: fork while the parent is
+    single-threaded and JAX-free; otherwise ``forkserver``, which forks
+    from a clean single-threaded server process.  Forkserver/spawn
+    re-import ``__main__`` in workers, which an interactive/stdin parent
+    cannot satisfy — those parents are exactly the single-threaded case,
+    so they keep fork.  Task functions are module-level and payloads
+    picklable by design, as all three methods require.
+    """
+    if threading.active_count() == 1 and "jax" not in sys.modules:
+        try:
+            return multiprocessing.get_context("fork")
+        except ValueError:  # pragma: no cover - non-Unix platforms
+            pass
+    try:
+        return multiprocessing.get_context("forkserver")
+    except ValueError:  # pragma: no cover - non-Unix platforms
+        return multiprocessing.get_context()
+
+
+def parallel_map(fn: Callable, items: Sequence,
+                 max_workers: Optional[int] = None,
+                 parallel: bool = True,
+                 initializer: Optional[Callable] = None,
+                 initargs: tuple = ()) -> List:
+    """``[fn(x) for x in items]`` across a process pool, order-preserving.
+
+    ``fn`` must be a module-level callable and ``items`` picklable.  Falls
+    back to a plain loop for 0/1 items, a 1-wide pool, or when
+    ``REPRO_SWEEP_SERIAL`` is set — the results are identical either way
+    (``initializer`` runs in-process on the serial path).
+    """
+    n = max_workers or default_pool_size()
+    if not parallel or n <= 1 or len(items) <= 1 or _serial_forced():
+        if initializer is not None:
+            initializer(*initargs)
+        return [fn(x) for x in items]
+    with ProcessPoolExecutor(max_workers=min(n, len(items)),
+                             mp_context=_pool_context(),
+                             initializer=initializer,
+                             initargs=initargs) as pool:
+        return list(pool.map(fn, items))
+
+
+# --------------------------------------------------------------------- tasks
+# Task payloads are plain tuples of picklable values; the functions are
+# module-level so the pool can import them by reference.
+
+SimTask = Tuple[SimConfig, list, int, int, int]  # cfg, templates, W, batch, warmup
+
+# Templates shipped once per pool worker (executor initializer) instead of
+# being re-pickled inside every task: a figure sweep reuses one template
+# list across dozens of tasks.
+_worker_templates: Optional[list] = None
+
+
+def _set_worker_templates(templates: list) -> None:
+    global _worker_templates
+    _worker_templates = templates
+
+
+def _strip_templates(task: SimTask) -> SimTask:
+    cfg, _templates, num_workers, batch_size, warmup_steps = task
+    return (cfg, None, num_workers, batch_size, warmup_steps)
+
+
+def simulate_task(task: SimTask) -> float:
+    """One seeded DES run -> examples/s.  The unit of parallel work.
+
+    ``templates is None`` means "use the per-worker template list" set by
+    the pool initializer (see :func:`predict_many`)."""
+    cfg, templates, num_workers, batch_size, warmup_steps = task
+    if templates is None:
+        templates = _worker_templates
+    trace = Simulation(cfg).run(templates, num_workers)
+    return trace.throughput(batch_size, warmup_steps=warmup_steps)
+
+
+def measure_task(args: tuple) -> float:
+    """One seeded cluster-emulator measurement -> examples/s."""
+    (dnn, batch_size, platform, num_workers, num_ps, steps, seed,
+     flow_control, order, warmup_steps) = args
+    from repro.core.paper_models import PAPER_DNNS, PLATFORMS
+    from repro.emulator.cluster import measure_throughput
+    return measure_throughput(
+        PAPER_DNNS[dnn], batch_size, PLATFORMS[platform], num_workers,
+        num_ps=num_ps, steps=steps, seed=seed, flow_control=flow_control,
+        order=order, warmup_steps=warmup_steps)
+
+
+def _run_tagged(tagged: tuple) -> float:
+    kind, payload = tagged
+    if kind == "sim":
+        return simulate_task(payload)
+    return measure_task(payload)
+
+
+def _measure_args(run, num_workers: int, steps: int, seed_offset: int) -> tuple:
+    return (run.dnn, run.batch_size, run.platform, num_workers, run.num_ps,
+            steps, run.seed + seed_offset, run.flow_control, run.order,
+            run.warmup_steps)
+
+
+def _group_means(outs: Sequence[float], workers: Sequence[int],
+                 n_runs: int, offset: int = 0) -> Dict[int, float]:
+    """Fold a flat, task-ordered result list (n_runs consecutive entries
+    per worker count, starting at ``offset``) into per-count means."""
+    result: Dict[int, float] = {}
+    for j, w in enumerate(workers):
+        chunk = outs[offset + j * n_runs:offset + (j + 1) * n_runs]
+        result[w] = sum(chunk) / len(chunk)
+    return result
+
+
+# ------------------------------------------------------------------- facades
+
+
+def predict_many(run, workers: Sequence[int], n_runs: int = 3,
+                 parallel: bool = True,
+                 max_workers: Optional[int] = None) -> Dict[int, float]:
+    """Predicted examples/s for each worker count, ``n_runs`` seeded
+    simulations per count, fanned over the pool.  Identical to calling
+    ``run.predict(w, n_runs)`` per count (same seeds, same mean)."""
+    if not run.sim_steps_templates:
+        run.prepare()
+    tasks: List[SimTask] = []
+    for w in workers:
+        tasks.extend(_strip_templates(t)
+                     for t in run.prediction_tasks(w, n_runs))
+    outs = parallel_map(simulate_task, tasks, max_workers=max_workers,
+                        parallel=parallel,
+                        initializer=_set_worker_templates,
+                        initargs=(run.sim_steps_templates,))
+    return _group_means(outs, workers, n_runs)
+
+
+def measure_many(run, workers: Sequence[int], steps: int = 100,
+                 n_runs: int = 1, parallel: bool = True,
+                 max_workers: Optional[int] = None) -> Dict[int, float]:
+    """Emulator ground truth for each worker count; ``n_runs == 1`` matches
+    ``run.measure(w)``, ``n_runs == 3`` matches ``run.measure_mean(w)``
+    (same per-run seed offsets ``1000 + 37*i``)."""
+    tasks = [_measure_args(run, w, steps, 1000 + 37 * i)
+             for w in workers for i in range(n_runs)]
+    outs = parallel_map(measure_task, tasks, max_workers=max_workers,
+                        parallel=parallel)
+    return _group_means(outs, workers, n_runs)
+
+
+def predict_and_measure(run, workers: Sequence[int], n_runs: int = 3,
+                        measure_steps: int = 100, measure_runs: int = 1,
+                        parallel: bool = True,
+                        max_workers: Optional[int] = None,
+                        ) -> Tuple[Dict[int, float], Dict[int, float]]:
+    """Fan ALL of a figure's simulation + measurement tasks in one pool."""
+    if not run.sim_steps_templates:
+        run.prepare()
+    tagged: List[tuple] = []
+    for w in workers:
+        for task in run.prediction_tasks(w, n_runs):
+            tagged.append(("sim", _strip_templates(task)))
+    for w in workers:
+        for i in range(measure_runs):
+            tagged.append(("meas", _measure_args(run, w, measure_steps,
+                                                 1000 + 37 * i)))
+    outs = parallel_map(_run_tagged, tagged, max_workers=max_workers,
+                        parallel=parallel,
+                        initializer=_set_worker_templates,
+                        initargs=(run.sim_steps_templates,))
+    pred = _group_means(outs, workers, n_runs)
+    meas = _group_means(outs, workers, measure_runs,
+                        offset=len(workers) * n_runs)
+    return pred, meas
+
+
+def sweep_parallel(run, workers: Sequence[int], measure_steps: int = 100,
+                   n_runs: int = 3, measure_runs: int = 1,
+                   parallel: bool = True,
+                   max_workers: Optional[int] = None) -> Dict[str, list]:
+    """Predicted vs measured curves (one paper sub-figure), all tasks in one
+    pool.  Same output dict as ``predictor.sweep`` with identical seeds."""
+    from repro.core.predictor import prediction_error
+    pred, meas = predict_and_measure(
+        run, workers, n_runs=n_runs, measure_steps=measure_steps,
+        measure_runs=measure_runs, parallel=parallel,
+        max_workers=max_workers)
+    p = [pred[w] for w in workers]
+    m = [meas[w] for w in workers]
+    return {"workers": list(workers), "predicted": p, "measured": m,
+            "error": [prediction_error(a, b) for a, b in zip(p, m)]}

@@ -63,16 +63,64 @@ class _Flow:
 
 
 class _Link:
+    """Weighted processor-sharing link with an incremental virtual clock.
+
+    Every flow on the link receives service at ``B * w_i / total_w``, i.e.
+    all flows share one per-unit-weight rate ``B / total_w``.  The link
+    keeps a cumulative per-unit-weight service clock ``U``; a finite flow
+    starting with ``r`` bytes and weight ``w`` completes when ``U`` reaches
+    ``u_target = U(start) + r / w`` — valid across any number of membership
+    (and hence rate) changes without touching per-flow state.  Projections
+    of the earliest completion onto real time are tagged with a rate epoch
+    and lazily invalidated, exactly like ``repro.core.simulator``.
+    """
+
     def __init__(self, bandwidth: float):
         self.bandwidth = bandwidth
         self.flows: Dict[int, _Flow] = {}
+        self.total_w = 0.0
+        self.U = 0.0               # per-unit-weight attained service
+        self.t_mat = 0.0           # time U was last materialized
+        self.heap: List[Tuple[float, int, _Flow]] = []   # finite flows
+        self.epoch = 0
 
-    def total_weight(self) -> float:
-        return sum(f.weight for f in self.flows.values())
+    def materialize(self, t: float) -> None:
+        if t > self.t_mat:
+            if self.total_w > 0:
+                self.U += self.bandwidth / self.total_w * (t - self.t_mat)
+            self.t_mat = t
 
-    def rate_of(self, flow: _Flow) -> float:
-        tw = self.total_weight()
-        return self.bandwidth * flow.weight / tw if tw > 0 else 0.0
+    def add_flow(self, t: float, flow: _Flow) -> None:
+        self.materialize(t)
+        self.flows[flow.fid] = flow
+        self.total_w += flow.weight
+        self.epoch += 1
+        if math.isfinite(flow.remaining):
+            heapq.heappush(self.heap,
+                           (self.U + flow.remaining / flow.weight,
+                            flow.fid, flow))
+
+    def remove_flow(self, t: float, fid: int) -> None:
+        flow = self.flows.pop(fid, None)
+        if flow is None:
+            return
+        self.materialize(t)
+        self.total_w -= flow.weight
+        if self.total_w < 1e-12:
+            self.total_w = sum(f.weight for f in self.flows.values())
+        self.epoch += 1
+        # finite flows leave the heap lazily (checked against self.flows)
+
+    def next_projection(self, t: float) -> Optional[float]:
+        """Real time of the earliest completion under the current rate."""
+        heap = self.heap
+        while heap and heap[0][2].fid not in self.flows:
+            heapq.heappop(heap)   # flow was force-removed; drop lazily
+        if not heap or self.total_w <= 0:
+            return None
+        self.materialize(t)
+        dt = (heap[0][0] - self.U) * self.total_w / self.bandwidth
+        return t + (dt if dt > 0.0 else 0.0)
 
 
 class _Conn:
@@ -108,7 +156,8 @@ class ClusterEmulator:
 
         # event machinery
         self.t = 0.0
-        self.timers: List[Tuple[float, int, Callable[[], None]]] = []
+        # unified calendar: (time, seq, callback | ("link", lid, epoch))
+        self.timers: List[Tuple[float, int, object]] = []
         self.links: Dict[str, _Link] = {}
         self.conns: Dict[Tuple[int, str], _Conn] = {}
         for p in range(num_ps):
@@ -168,6 +217,49 @@ class ClusterEmulator:
         conn.win_state = rho * conn.win_state + self.rng.gauss(0.0, p.win_sigma)
         return max(1e5, p.win_mu * (1.0 + conn.win_state))
 
+    # ------------------------------------------------- link event machinery
+
+    def _schedule_link(self, lid: str) -> None:
+        """(Re-)project the link's earliest flow completion onto the
+        timer calendar; stale projections are dropped by epoch check."""
+        link = self.links[lid]
+        tp = link.next_projection(self.t)
+        if tp is not None:
+            heapq.heappush(self.timers,
+                           (tp, next(_seq), ("link", lid, link.epoch)))
+
+    def _link_event(self, lid: str, epoch: int) -> None:
+        link = self.links[lid]
+        if epoch != link.epoch:
+            return                      # rate moved on; projection is stale
+        link.materialize(self.t)
+        lim = link.U + 1e-9 + link.U * 1e-12
+        heap = link.heap
+        done: List[_Flow] = []
+        while heap and (heap[0][2].fid not in link.flows
+                        or heap[0][0] <= lim):
+            _u, fid, flow = heapq.heappop(heap)
+            if fid in link.flows:
+                done.append(flow)
+        if done:
+            for flow in done:
+                del link.flows[flow.fid]
+                link.total_w -= flow.weight
+            if not link.flows:
+                link.total_w = 0.0
+            elif link.total_w < 1e-12:
+                link.total_w = sum(f.weight for f in link.flows.values())
+            link.epoch += 1
+            epoch_before_cbs = link.epoch
+            for flow in done:
+                if flow.on_complete:
+                    flow.on_complete()
+            if link.epoch != epoch_before_cbs:
+                # a callback re-filled the link and already projected it;
+                # a second same-epoch projection would double link events
+                return
+        self._schedule_link(lid)
+
     # ------------------------------------------------------ background flows
 
     def _schedule_bg_arrival(self, lid: str) -> None:
@@ -178,13 +270,15 @@ class ClusterEmulator:
     def _bg_arrive(self, lid: str) -> None:
         p = self.platform
         flow = _Flow(fid=next(_seq), weight=1.0, remaining=math.inf)
-        self.links[lid].flows[flow.fid] = flow
+        self.links[lid].add_flow(self.t, flow)
+        self._schedule_link(lid)
         dur = self.rng.expovariate(1.0 / p.bg_mean_duration)
         self._timer(dur, lambda: self._bg_depart(lid, flow.fid))
         self._schedule_bg_arrival(lid)
 
     def _bg_depart(self, lid: str, fid: int) -> None:
-        self.links[lid].flows.pop(fid, None)
+        self.links[lid].remove_flow(self.t, fid)
+        self._schedule_link(lid)
 
     # --------------------------------------------------------- op lifecycle
 
@@ -329,7 +423,8 @@ class ClusterEmulator:
             self._conn_kick(conn, lid)
 
         flow.on_complete = burst_done
-        self.links[lid].flows[flow.fid] = flow
+        self.links[lid].add_flow(self.t, flow)
+        self._schedule_link(lid)
 
     def _stream_complete(self, stream: _Stream, lid: str) -> None:
         w = stream.worker
@@ -391,61 +486,23 @@ class ClusterEmulator:
 
         guard = 0
         max_events = 2000 * steps_per_worker * self.W * max(1, len(self.ops))
-        last_t = self.t
+        timers = self.timers
         while self.t < horizon:
             guard += 1
             if guard > max_events:
                 raise RuntimeError("emulator event guard tripped")
             if all(c >= self.steps_target for c in self.completed_steps):
                 break
+            if not timers:
+                break  # nothing left to do (link events live here too)
 
-            # advance fluid flows to now-pending event time
-            t_fluid, fluid_link, fluid_flow = self._next_fluid()
-            t_timer = self.timers[0][0] if self.timers else math.inf
-            t_next = min(t_fluid, t_timer)
-            if not math.isfinite(t_next):
-                break  # nothing left to do
-
-            self._advance_fluid(t_next - self.t)
-            self.t = t_next
-
-            if t_fluid <= t_timer and fluid_flow is not None:
-                link = self.links[fluid_link]
-                link.flows.pop(fluid_flow.fid, None)
-                if fluid_flow.on_complete:
-                    fluid_flow.on_complete()
+            t_next, _s, item = heapq.heappop(timers)
+            if t_next > self.t:
+                self.t = t_next
+            if type(item) is tuple:       # ("link", lid, epoch) projection
+                self._link_event(item[1], item[2])
             else:
-                _, _, cb = heapq.heappop(self.timers)
-                cb()
-
-    def _next_fluid(self) -> Tuple[float, str, Optional[_Flow]]:
-        best_t, best_lid, best_flow = math.inf, "", None
-        for lid, link in self.links.items():
-            tw = link.total_weight()
-            if tw <= 0:
-                continue
-            for flow in link.flows.values():
-                if not math.isfinite(flow.remaining):
-                    continue
-                rate = link.bandwidth * flow.weight / tw
-                if rate <= 0:
-                    continue
-                tf = self.t + flow.remaining / rate
-                if tf < best_t:
-                    best_t, best_lid, best_flow = tf, lid, flow
-        return best_t, best_lid, best_flow
-
-    def _advance_fluid(self, dt: float) -> None:
-        if dt <= 0:
-            return
-        for link in self.links.values():
-            tw = link.total_weight()
-            if tw <= 0:
-                continue
-            for flow in link.flows.values():
-                if math.isfinite(flow.remaining):
-                    rate = link.bandwidth * flow.weight / tw
-                    flow.remaining = max(0.0, flow.remaining - rate * dt)
+                item()
 
     # ------------------------------------------------------------ public API
 

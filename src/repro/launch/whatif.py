@@ -21,8 +21,28 @@ from __future__ import annotations
 import argparse
 
 from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.core.sweep import parallel_map
 from repro.core.tpu_adapter import (MeshFactors, build_step_dag,
                                     predict_step_time)
+
+
+def _pods_task(args: tuple) -> tuple:
+    """One pod count's what-if predictions (fanned across cores)."""
+    (arch, shape, pods, straggler, compress, win, mfu) = args
+    cfg = get_config(arch)
+    sp = SHAPES[shape]
+    mesh = MeshFactors(pods=pods, mfu=mfu)
+    tokens = sp.global_batch * sp.seq_len
+    dag = build_step_dag(cfg, mesh, tokens)
+    t = predict_step_time(dag, num_pods=pods, win_bytes=win)
+    t_st = predict_step_time(dag, num_pods=pods, straggler_factor=straggler,
+                             win_bytes=win) if straggler != 1.0 else t
+    if compress != 1.0 and pods > 1:
+        dag_c = build_step_dag(cfg, mesh, tokens, compressed_dcn=compress)
+        t_c = predict_step_time(dag_c, num_pods=pods, win_bytes=win)
+    else:
+        t_c = t
+    return (pods, mesh.chips, t, t_st, t_c)
 
 
 def main() -> None:
@@ -38,30 +58,16 @@ def main() -> None:
     ap.add_argument("--mfu", type=float, default=0.5)
     args = ap.parse_args()
 
-    cfg = get_config(args.arch)
-    sp = SHAPES[args.shape]
     print(f"{'pods':>5s} {'chips':>6s} {'step_time':>10s} {'rel_tput':>9s} "
           f"{'straggler':>10s} {'compressed':>11s}")
+    tasks = [(args.arch, args.shape, pods, args.straggler, args.compress,
+              args.win, args.mfu) for pods in args.pods]
     base = None
-    for pods in args.pods:
-        mesh = MeshFactors(pods=pods, mfu=args.mfu)
-        tokens = sp.global_batch * sp.seq_len
-        dag = build_step_dag(cfg, mesh, tokens)
-        t = predict_step_time(dag, num_pods=pods, win_bytes=args.win)
+    for pods, chips, t, t_st, t_c in parallel_map(_pods_task, tasks):
         if base is None:
-            base = t * mesh.chips
-        rel = (base / (t * mesh.chips))
-        t_st = predict_step_time(dag, num_pods=pods,
-                                 straggler_factor=args.straggler,
-                                 win_bytes=args.win) \
-            if args.straggler != 1.0 else t
-        if args.compress != 1.0 and pods > 1:
-            dag_c = build_step_dag(cfg, mesh, tokens,
-                                   compressed_dcn=args.compress)
-            t_c = predict_step_time(dag_c, num_pods=pods, win_bytes=args.win)
-        else:
-            t_c = t
-        print(f"{pods:5d} {mesh.chips:6d} {t*1e3:9.1f}ms {rel:7.2f}x "
+            base = t * chips
+        rel = (base / (t * chips))
+        print(f"{pods:5d} {chips:6d} {t*1e3:9.1f}ms {rel:7.2f}x "
               f"{t_st*1e3:9.1f}ms {t_c*1e3:10.1f}ms")
 
 

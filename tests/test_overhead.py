@@ -1,7 +1,7 @@
 """Parsing-overhead model (paper §3.2.1) + profile preprocessing."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.events import LINK
 from repro.core.overhead import (OverheadModel, RecordedOp, RecordedStep,

@@ -2,7 +2,7 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.events import Op, StepTemplate, ps_resources
 from repro.core.simulator import SimConfig, Simulation
