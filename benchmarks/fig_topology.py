@@ -1,0 +1,148 @@
+"""Topology what-ifs: oversubscription x PS placement x heterogeneous NICs.
+
+The paper stops at flat star topologies; this figure sweeps the three
+cluster-structure axes the topology layer adds, all through the parallel
+sweep engine (``repro.core.sweep``):
+
+  * **oversub**: both PS shards isolated in one rack whose uplink is
+    oversubscribed 1x..8x — throughput saturates earlier as the ratio
+    grows (the fabric, not the PS NIC, becomes the bottleneck);
+  * **placement**: one PS dedicated vs colocated with worker 0 — the
+    shared host NIC carries the PS fan-in/out plus the worker's own
+    traffic, so the bottleneck shifts and scale-out flattens;
+  * **nic**: a 2x/4x PS NIC on a flat star — the PS link constraint
+    relaxes and throughput scales further before saturating.
+
+AlexNet at batch 8 on the private CPU cluster (the paper's most
+bandwidth-bound regime), predictions averaged over seeded runs; slow mode
+adds emulator ground truth for the oversubscription scenario.  Writes
+``benchmarks/results/fig_topology.json``:
+
+    PYTHONPATH=src python -m benchmarks.fig_topology [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.core import sweep
+from repro.core.predictor import PredictionRun
+from repro.core.topology import Node, Placement, Rack, Topology
+
+from .common import row, save_json
+
+DNN = "alexnet"
+BATCH = 8
+PLATFORM = "private_cpu"
+OVERSUB_RATIOS = (1.0, 2.0, 4.0, 8.0)
+PS_NICS = (1.0, 2.0, 4.0)
+
+
+def ps_rack_topology(num_workers: int, num_ps: int, ratio: float) -> Topology:
+    """PS shards isolated in rack r0 (oversubscribed uplink); workers in
+    rack r1 — every byte of PS traffic crosses r0's fabric."""
+    return Topology(
+        workers=tuple(Node(f"w{i}", rack="r1") for i in range(num_workers)),
+        ps_nodes=tuple(Node(f"ps{p}", rack="r0") for p in range(num_ps)),
+        racks=(Rack("r0", oversubscription=ratio), Rack("r1")))
+
+
+def colocated_topology(num_workers: int) -> Topology:
+    return Topology(
+        workers=tuple(Node(f"w{i}") for i in range(num_workers)),
+        placement=Placement(("w0",)))
+
+
+def star_with_ps_nic(num_workers: int, nic: float) -> Topology:
+    return Topology(
+        workers=tuple(Node(f"w{i}") for i in range(num_workers)),
+        ps_nodes=(Node("ps0", nic=nic),))
+
+
+def run(fast: bool = False, workers=(1, 2, 4, 6, 8), profile_steps=30,
+        sim_steps=250, n_runs=3, measure_steps=100) -> dict:
+    if fast:
+        workers = (1, 2, 4)
+        profile_steps, sim_steps, n_runs = 20, 150, 2
+    out = {"figure": "fig_topology", "dnn": DNN, "batch": BATCH,
+           "platform": PLATFORM, "workers": list(workers),
+           "scenarios": {}, "checks": {}}
+    wmax = max(workers)
+
+    base2 = PredictionRun(dnn=DNN, batch_size=BATCH, platform=PLATFORM,
+                          num_ps=2, profile_steps=profile_steps,
+                          sim_steps=sim_steps).prepare()
+    base1 = PredictionRun(dnn=DNN, batch_size=BATCH, platform=PLATFORM,
+                          num_ps=1, profile_steps=profile_steps,
+                          sim_steps=sim_steps).prepare()
+
+    # -- oversubscription sweep (2 PS shards behind one rack uplink) --------
+    print("scenario,variant,W,predicted,measured")
+    oversub = {}
+    for ratio in OVERSUB_RATIOS:
+        r = base2.with_topology(ps_rack_topology(wmax, 2, ratio))
+        if fast:
+            pred = sweep.predict_many(r, workers, n_runs=n_runs)
+            meas = {}
+        else:
+            pred, meas = sweep.predict_and_measure(
+                r, workers, n_runs=n_runs, measure_steps=measure_steps)
+        oversub[str(ratio)] = {
+            "predicted": [pred[w] for w in workers],
+            "measured": [meas.get(w) for w in workers] if meas else None,
+        }
+        for w in workers:
+            print(row("oversub", ratio, w, f"{pred[w]:.2f}",
+                      f"{meas[w]:.2f}" if meas else "-"), flush=True)
+    out["scenarios"]["oversub"] = oversub
+
+    # -- PS placement: dedicated star vs colocated with worker 0 ------------
+    placement = {}
+    for name, topo in (("dedicated", Topology.star(wmax, 1)),
+                       ("colocated_w0", colocated_topology(wmax))):
+        r = base1.with_topology(topo)
+        pred = sweep.predict_many(r, workers, n_runs=n_runs)
+        placement[name] = {"predicted": [pred[w] for w in workers]}
+        for w in workers:
+            print(row("placement", name, w, f"{pred[w]:.2f}", "-"),
+                  flush=True)
+    out["scenarios"]["placement"] = placement
+
+    # -- heterogeneous PS NIC on a flat star --------------------------------
+    nic = {}
+    for cap in PS_NICS:
+        r = base1.with_topology(star_with_ps_nic(wmax, cap))
+        pred = sweep.predict_many(r, workers, n_runs=n_runs)
+        nic[str(cap)] = {"predicted": [pred[w] for w in workers]}
+        for w in workers:
+            print(row("nic", cap, w, f"{pred[w]:.2f}", "-"), flush=True)
+    out["scenarios"]["nic"] = nic
+
+    # -- qualitative gates (the reason this figure exists) ------------------
+    at_wmax = lambda d: d["predicted"][-1]
+    ratios = [at_wmax(oversub[str(x)]) for x in OVERSUB_RATIOS]
+    out["checks"]["oversub_throttles"] = ratios[-1] < ratios[0]
+    out["checks"]["oversub_monotone"] = all(
+        b <= a * 1.02 for a, b in zip(ratios, ratios[1:]))
+    out["checks"]["colocated_slower"] = (
+        at_wmax(placement["colocated_w0"]) < at_wmax(placement["dedicated"]))
+    caps = [at_wmax(nic[str(c)]) for c in PS_NICS]
+    out["checks"]["fat_ps_nic_helps"] = caps[-1] > caps[0]
+    save_json("fig_topology", out)
+    print(f"# checks: {out['checks']}")
+    if not all(out["checks"].values()):
+        raise AssertionError(f"qualitative topology checks failed: "
+                             f"{out['checks']}")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="CI-sized run")
+    args = ap.parse_args()
+    run(fast=args.fast)
+
+
+if __name__ == "__main__":
+    main()
+
+

@@ -17,10 +17,12 @@ import os
 import random
 import time
 
+from repro.core.bandwidth import BandwidthModel
 from repro.core.events import Op, StepTemplate, ps_resources
 from repro.core.simulator import SimConfig, Simulation
 from repro.core.simulator_ref import ReferenceSimulation
 from repro.core.sweep import default_pool_size, parallel_map, simulate_task
+from repro.core.topology import Topology
 
 DEFAULT_OUT = os.path.join(os.path.dirname(__file__), os.pardir,
                            "BENCH_sim.json")
@@ -30,15 +32,22 @@ SIZES = (("small", 3, 300), ("medium", 16, 120), ("large", 64, 40))
 WORKER_COUNTS = (1, 2, 4, 8)
 
 
-def make_template(layers: int, seed: int = 0) -> StepTemplate:
+def make_template(layers: int, seed: int = 0,
+                  num_ps: int = 1) -> StepTemplate:
     """A PS-training-shaped step: per layer download -> fwd; then reverse
-    bwd -> upload, with the paper's pipeline dependencies."""
+    bwd -> upload, with the paper's pipeline dependencies.  Layers
+    round-robin over ``num_ps`` parameter servers."""
     rng = random.Random(seed)
+
+    def link(kind, i):
+        return kind if num_ps == 1 else f"{kind}:{i % num_ps}"
+
     ops = []
     fwd_prev = None
     for i in range(layers):
         dl = len(ops)
-        ops.append(Op(f"dl{i}", "downlink", size=rng.uniform(2e6, 3e7)))
+        ops.append(Op(f"dl{i}", link("downlink", i),
+                      size=rng.uniform(2e6, 3e7)))
         deps = (dl,) if fwd_prev is None else (dl, fwd_prev)
         fwd_prev = len(ops)
         ops.append(Op(f"fwd{i}", "worker", duration=rng.uniform(.005, .05),
@@ -49,13 +58,16 @@ def make_template(layers: int, seed: int = 0) -> StepTemplate:
         ops.append(Op(f"bwd{i}", "worker", duration=rng.uniform(.01, .08),
                       deps=(bwd_prev,)))
         bwd_prev = bwd
-        ops.append(Op(f"ul{i}", "uplink", size=rng.uniform(2e6, 3e7),
-                      deps=(bwd,)))
+        ops.append(Op(f"ul{i}", link("uplink", i),
+                      size=rng.uniform(2e6, 3e7), deps=(bwd,)))
     return StepTemplate(ops=ops)
 
 
-def make_cfg(steps_per_worker: int, seed: int = 0) -> SimConfig:
-    return SimConfig(resources=ps_resources(1e9), link_policy="http2",
+def make_cfg(steps_per_worker: int, seed: int = 0, num_ps: int = 1,
+             bandwidth_model=None, topology=None) -> SimConfig:
+    return SimConfig(resources=ps_resources(1e9, num_ps),
+                     topology=topology, bandwidth_model=bandwidth_model,
+                     link_policy="http2",
                      win=2.8e6, steps_per_worker=steps_per_worker,
                      warmup_steps=10, seed=seed, service_jitter=0.08,
                      stall_alpha=2e-9, stall_rtt=5e-4)
@@ -105,6 +117,48 @@ def run(fast: bool = False, skip_ref: bool = False,
                    "throughput": tput_new, "throughput_ref": tput_ref}
             out["workloads"].append(rec)
             print(f"{name},{nops},{w},{t_new:.3f},"
+                  f"{t_ref if t_ref is None else round(t_ref, 3)},"
+                  f"{rec['speedup'] and round(rec['speedup'], 2)},"
+                  f"{events},{events / t_new:.0f}", flush=True)
+
+    # general bandwidth-model path: the M >= 2 water-filling fallback
+    # (per-connection projections instead of uniform per-link clocks) and
+    # the topology mode (rack fabric groups on top), which the equal-share
+    # numbers above never exercise
+    name, layers, steps = sizes[min(1, len(sizes) - 1)]
+    sp = steps // 4 if fast else steps
+    tpls2 = [make_template(layers, seed=s, num_ps=2) for s in range(3)]
+    wmax = workers[-1]
+    topo = Topology.racked(wmax, 2, racks=2, oversubscription=4.0)
+    general_cases = (
+        ("2ps_waterfill", dict(num_ps=2, bandwidth_model=BandwidthModel())),
+        ("2ps_topology", dict(num_ps=2, topology=topo,
+                              bandwidth_model=topo.grouped_model())),
+    )
+    out["general"] = []
+    print("general,mode,W,engine_s,ref_s,speedup,events,events_per_s")
+    for mode, kw in general_cases:
+        for w in workers:
+            def cfg_fn(rep, kw=kw):
+                return make_cfg(sp, seed=rep, **kw)
+            t_new, events, tput_new = time_engine(
+                Simulation, tpls2, cfg_fn, w, reps)
+            # the frozen reference engine predates the topology layer but
+            # honors cfg.resources/bandwidth_model, so it remains a valid
+            # baseline for speed-1.0 topologies like this one
+            if skip_ref:
+                t_ref = tput_ref = None
+            else:
+                t_ref, _e, tput_ref = time_engine(
+                    ReferenceSimulation, tpls2, cfg_fn, w, reps)
+            rec = {"mode": mode, "workload": name, "W": w,
+                   "steps_per_worker": sp, "engine_s": t_new,
+                   "ref_s": t_ref,
+                   "speedup": (t_ref / t_new) if t_ref else None,
+                   "events": events, "events_per_s": events / t_new,
+                   "throughput": tput_new, "throughput_ref": tput_ref}
+            out["general"].append(rec)
+            print(f"general,{mode},{w},{t_new:.3f},"
                   f"{t_ref if t_ref is None else round(t_ref, 3)},"
                   f"{rec['speedup'] and round(rec['speedup'], 2)},"
                   f"{events},{events / t_new:.0f}", flush=True)

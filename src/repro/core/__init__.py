@@ -1,7 +1,8 @@
 # The paper's primary contribution: trace-driven discrete-event simulation
 # for asynchronous-SGD throughput prediction (Li et al., ICPE'20), plus the
 # coarse baselines it compares against and the TPU adaptation layer.
-from .bandwidth import BandwidthModel, EqualShareModel
+from .bandwidth import (BandwidthModel, EqualShareModel,
+                        GroupedBandwidthModel, waterfill)
 from .events import (COMPUTE, LINK, Op, ResourceSpec, StepTemplate, Trace,
                      ps_resources)
 from .overhead import (OverheadModel, RecordedOp, RecordedStep,
@@ -9,17 +10,21 @@ from .overhead import (OverheadModel, RecordedOp, RecordedStep,
 from .paper_models import PAPER_DNNS, PLATFORMS
 from .predictor import PredictionRun, calibrate_overhead, prediction_error
 from .simulator import SimConfig, Simulation, predict_throughput
+from .topology import (Node, Placement, Rack, Topology,
+                       TopologyBandwidthModel)
 # NOTE: ``repro.core.sweep`` is the parallel sweep-engine MODULE; the
 # figure-sweep convenience function lives at ``repro.core.predictor.sweep``.
 from .sweep import (measure_many, parallel_map, predict_many,
                     sweep_parallel)
 
 __all__ = [
-    "BandwidthModel", "EqualShareModel", "COMPUTE", "LINK", "Op",
+    "BandwidthModel", "EqualShareModel", "GroupedBandwidthModel",
+    "waterfill", "COMPUTE", "LINK", "Op",
     "ResourceSpec", "StepTemplate", "Trace", "ps_resources", "OverheadModel",
     "RecordedOp", "RecordedStep", "preprocess_profile",
     "preprocess_recorded_step", "PAPER_DNNS", "PLATFORMS", "PredictionRun",
     "calibrate_overhead", "prediction_error", "SimConfig",
-    "Simulation", "predict_throughput", "measure_many", "parallel_map",
-    "predict_many", "sweep_parallel",
+    "Simulation", "predict_throughput",
+    "Node", "Placement", "Rack", "Topology", "TopologyBandwidthModel",
+    "measure_many", "parallel_map", "predict_many", "sweep_parallel",
 ]

@@ -1,4 +1,4 @@
-"""Bandwidth-sharing models (paper §3.1 and §5).
+"""Bandwidth-sharing models (paper §3.1 and §5), generalized to topologies.
 
 Single PS (§3.1): each of the ``n`` workers actively transmitting or
 receiving gets ``1/n`` of the link in that direction; compute resources are
@@ -9,32 +9,138 @@ equally, but a worker's NIC caps its total share per direction: a worker
 alone on PS1 while sharing PS2 with n-1 others gets 1/n on PS2 and at most
 1 - 1/n on PS1.
 
-We implement the general **max-min water-filling** allocation over the
-bipartite graph of (worker NIC, direction) and (PS link, direction)
-capacities, which reduces exactly to both paper rules:
+We implement the general **max-min water-filling** allocation over an
+arbitrary set of *capacity groups* — each group caps the total share of its
+member connections.  The classic two-level structure {per-PS-link,
+per-worker-NIC} is just one choice of groups; a rack uplink, a colocated
+PS/worker NIC, or a heterogeneous 10 GbE port is simply another group with
+another capacity (see ``repro.core.topology``).  The allocation reduces
+exactly to both paper rules:
 
   * one PS, n active workers -> PS capacity saturates first -> 1/n each;
   * the §5 example -> PS2 conns freeze at 1/n, then the lone PS1 conn rises
     until the worker NIC saturates at 1 - 1/n.
 
-This also extends to M > 2 parameter servers (the paper's stated future
-work) and to heterogeneous capacities.
+Shares are expressed in multiples of the *nominal* link bandwidth B, so a
+capacity of 1.0 means "one nominal NIC" and 2.0 models a double-speed port.
 """
 from __future__ import annotations
 
-from typing import Dict, Iterable, Mapping, Set, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Set, Tuple
 
 # A connection is (worker, link_resource_name); shares are fractions of the
-# nominal link bandwidth B (homogeneous NICs assumed, as in the paper).
+# nominal link bandwidth B.
 Conn = Tuple[int, str]
+
+_SAT_EPS = 1e-12
 
 
 def _direction_of(res_name: str) -> str:
     return res_name.split(":")[0]  # 'downlink' / 'uplink' (index stripped)
 
 
+def waterfill(conns: Sequence[Conn],
+              caps: Mapping[object, float],
+              members: Mapping[object, Sequence[Conn]],
+              weights: Optional[Mapping[Conn, float]] = None,
+              ) -> Dict[Conn, float]:
+    """Max-min progressive filling over arbitrary capacity groups.
+
+    ``caps[k]`` bounds the total share of ``members[k]``; every connection
+    should belong to at least one group (an unconstrained connection would
+    absorb the whole raise loop).  With ``weights``, shares rise in
+    proportion to each connection's weight (weighted max-min); without, the
+    arithmetic is identical to the historical two-level implementation.
+
+    Raise unfrozen conns until some group saturates; freeze its members;
+    repeat — at most ``len(caps)`` rounds since each round freezes a group.
+    """
+    share: Dict[Conn, float] = {c: 0.0 for c in conns}
+    covered: Set[Conn] = set()
+    for ms in members.values():
+        covered.update(ms)
+    for c in conns:
+        if c not in covered:
+            # an unconstrained connection would absorb the whole raise
+            # loop and come back with a meaningless share — fail loudly
+            raise ValueError(
+                f"connection {c!r} belongs to no capacity group; every "
+                f"connection needs at least one (its link's, typically)")
+    frozen: Set[Conn] = set()
+    remaining_cap = dict(caps)
+    for _ in range(len(caps) + 1):
+        unfrozen = [c for c in conns if c not in frozen]
+        if not unfrozen:
+            break
+        # headroom per group divided by its unfrozen member count/weight
+        best_delta = None
+        denoms: Dict[object, float] = {}
+        for key, ms in members.items():
+            if weights is None:
+                denom = sum(1 for c in ms if c not in frozen)
+            else:
+                denom = sum(weights[c] for c in ms if c not in frozen)
+            denoms[key] = denom
+            if not denom:
+                continue
+            delta = remaining_cap[key] / denom
+            if best_delta is None or delta < best_delta:
+                best_delta = delta
+        if best_delta is None:
+            break
+        # apply the raise
+        if weights is None:
+            for c in unfrozen:
+                share[c] += best_delta
+        else:
+            for c in unfrozen:
+                share[c] += best_delta * weights[c]
+        for key, denom in denoms.items():
+            remaining_cap[key] -= best_delta * denom
+        # freeze members of (now) saturated groups
+        for key, ms in members.items():
+            if remaining_cap[key] <= _SAT_EPS * max(1.0, caps[key]):
+                for c in ms:
+                    frozen.add(c)
+    return share
+
+
+def two_level_groups(conns: Sequence[Conn],
+                     link_caps: Optional[Mapping[str, float]] = None,
+                     worker_caps: Optional[Mapping[int, float]] = None,
+                     default_link_cap: float = 1.0,
+                     default_worker_cap: float = 1.0,
+                     ) -> Tuple[Dict[object, float], Dict[object, list]]:
+    """The paper's two-level group structure over a connection list: one
+    group per link resource, one per (worker, direction) NIC.  Every
+    grouped model starts from this and layers extra groups on top."""
+    link_members: Dict[str, list] = {}
+    nic_members: Dict[Tuple[int, str], list] = {}
+    for c in conns:
+        w, r = c
+        link_members.setdefault(r, []).append(c)
+        nic_members.setdefault((w, _direction_of(r)), []).append(c)
+
+    caps: Dict[object, float] = {}
+    members: Dict[object, list] = {}
+    for r, ms in link_members.items():
+        caps[("link", r)] = (link_caps or {}).get(r, default_link_cap)
+        members[("link", r)] = ms
+    for k, ms in nic_members.items():
+        caps[("nic",) + k] = (worker_caps or {}).get(k[0],
+                                                    default_worker_cap)
+        members[("nic",) + k] = ms
+    return caps, members
+
+
 class BandwidthModel:
-    """Max-min fair shares under per-link and per-worker-NIC capacity."""
+    """Max-min fair shares under per-link and per-worker-NIC capacity.
+
+    The two-level special case with homogeneous capacities — the
+    paper-§5-faithful model for flat multi-PS clusters.  Heterogeneous or
+    nested constraints use :class:`GroupedBandwidthModel` (explicit group
+    data) or ``topology.TopologyBandwidthModel`` (compiled from a cluster
+    graph)."""
 
     def __init__(self, worker_nic_capacity: float = 1.0,
                  link_capacity: float = 1.0):
@@ -49,56 +155,47 @@ class BandwidthModel:
         conns = [(w, r) for r, ws in active.items() for w in ws]
         if not conns:
             return {}
+        caps, members = two_level_groups(
+            conns, default_link_cap=self.link_capacity,
+            default_worker_cap=self.worker_nic_capacity)
+        return waterfill(conns, caps, members)
 
-        # Constraint groups: each link, and each (worker, direction) NIC.
-        link_members: Dict[str, list] = {}
-        nic_members: Dict[Tuple[int, str], list] = {}
-        for c in conns:
-            w, r = c
-            link_members.setdefault(r, []).append(c)
-            nic_members.setdefault((w, _direction_of(r)), []).append(c)
 
-        caps: Dict[object, float] = {}
-        members: Dict[object, list] = {}
-        for r, ms in link_members.items():
-            caps[("link", r)] = self.link_capacity
-            members[("link", r)] = ms
-        for k, ms in nic_members.items():
-            caps[("nic",) + k] = self.worker_nic_capacity
-            members[("nic",) + k] = ms
+class GroupedBandwidthModel(BandwidthModel):
+    """Water-filling over an explicit group set.
 
-        share: Dict[Conn, float] = {c: 0.0 for c in conns}
-        frozen: Set[Conn] = set()
-        remaining_cap = dict(caps)
-        # Progressive filling: raise unfrozen conns equally until some
-        # constraint saturates; freeze its members; repeat.
-        for _ in range(len(caps) + 1):
-            unfrozen = [c for c in conns if c not in frozen]
-            if not unfrozen:
-                break
-            # headroom per constraint divided by its unfrozen member count
-            best_delta = None
-            for key, ms in members.items():
-                n_unfrozen = sum(1 for c in ms if c not in frozen)
-                if n_unfrozen == 0:
-                    continue
-                delta = remaining_cap[key] / n_unfrozen
-                if best_delta is None or delta < best_delta:
-                    best_delta = delta
-            if best_delta is None:
-                break
-            # apply the raise
-            for c in unfrozen:
-                share[c] += best_delta
-            for key, ms in members.items():
-                n_unfrozen = sum(1 for c in ms if c not in frozen)
-                remaining_cap[key] -= best_delta * n_unfrozen
-            # freeze members of (now) saturated constraints
-            for key, ms in members.items():
-                if remaining_cap[key] <= 1e-12:
-                    for c in ms:
-                        frozen.add(c)
-        return share
+    ``link_caps``   : link resource name -> capacity (home-node NIC side);
+    ``worker_caps`` : worker index -> NIC capacity (both directions);
+    ``extra_groups``: sequence of ``(key, capacity, members)`` where
+    ``members`` is a frozenset of either link resource names or full
+    ``(worker, link)`` connections — a rack uplink, a shared colocated NIC,
+    any nested constraint.  Unlisted links/workers default to capacity 1.0,
+    so the empty model is exactly :class:`BandwidthModel`.
+    """
+
+    def __init__(self, link_caps: Optional[Mapping[str, float]] = None,
+                 worker_caps: Optional[Mapping[int, float]] = None,
+                 extra_groups: Sequence[tuple] = ()):
+        super().__init__()
+        self.link_caps = dict(link_caps or {})
+        self.worker_caps = dict(worker_caps or {})
+        self.extra_groups = tuple(extra_groups)
+
+    def shares(self, active: Mapping[str, Set[int]]) -> Dict[Conn, float]:
+        conns = [(w, r) for r, ws in active.items() for w in ws]
+        if not conns:
+            return {}
+        caps, members = two_level_groups(
+            conns, self.link_caps, self.worker_caps,
+            default_link_cap=self.link_capacity,
+            default_worker_cap=self.worker_nic_capacity)
+        for key, cap, group_members in self.extra_groups:
+            ms = [c for c in conns
+                  if c in group_members or c[1] in group_members]
+            if ms:
+                caps[("grp", key)] = cap
+                members[("grp", key)] = ms
+        return waterfill(conns, caps, members)
 
 
 class EqualShareModel(BandwidthModel):

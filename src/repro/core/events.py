@@ -50,7 +50,11 @@ class ResourceSpec:
 
 
 def ps_resources(bandwidth: float, num_ps: int = 1) -> Dict[str, ResourceSpec]:
-    """The paper's resource set for ``num_ps`` parameter servers.
+    """The paper's resource set for ``num_ps`` parameter servers — the thin
+    star-topology factory.  ``repro.core.topology.Topology.resources()``
+    compiles every topology down to this same canonical resource set;
+    heterogeneous capacities and fabric constraints live in the bandwidth
+    model's capacity groups, not in the per-link specs.
 
     For one PS the canonical names are downlink/uplink/worker/ps; for M > 1
     the link and ps-compute resources are indexed per server.

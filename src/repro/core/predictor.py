@@ -10,7 +10,7 @@
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
@@ -22,6 +22,7 @@ from repro.core.overhead import (OverheadModel, RecordedStep,
                                  preprocess_profile)
 from repro.core.paper_models import PAPER_DNNS, PLATFORMS, Platform
 from repro.core.simulator import SimConfig
+from repro.core.topology import Topology
 from repro.emulator.cluster import (measure_throughput, probe_parse_overheads,
                                     profile_single_worker)
 
@@ -49,11 +50,26 @@ class PredictionRun:
     warmup_steps: int = 50
     win_estimate: Optional[float] = None   # None -> platform nominal mean
     bandwidth_model: Optional[BandwidthModel] = None
+    # Cluster structure (None = the paper's flat star).  Profiling stays
+    # topology-free — the paper's method profiles ONE worker against the
+    # PS shards, then simulates any cluster; the topology enters through
+    # the bandwidth model, compute speed factors, and the emulator's
+    # ground-truth fabric.
+    topology: Optional[Topology] = None
 
     # filled by prepare()
     profile: List[RecordedStep] = field(default_factory=list)
     sim_steps_templates: List[StepTemplate] = field(default_factory=list)
     overhead: Optional[OverheadModel] = None
+
+    def __post_init__(self):
+        if self.topology is not None:
+            shards = self.topology.num_shards
+            if self.num_ps not in (1, shards):
+                raise ValueError(
+                    f"num_ps={self.num_ps} conflicts with topology "
+                    f"({shards} PS shard(s)); omit num_ps or make them match")
+            self.num_ps = shards
 
     def prepare(self) -> "PredictionRun":
         plat = PLATFORMS[self.platform]
@@ -66,6 +82,23 @@ class PredictionRun:
         self.sim_steps_templates = preprocess_profile(self.profile, self.overhead)
         return self
 
+    def with_topology(self, topology: Optional[Topology]) -> "PredictionRun":
+        """Clone this (possibly prepared) run under a different topology.
+
+        The 1-worker profile depends only on (dnn, batch, platform,
+        num_ps) — the paper's own premise: profile once, simulate every
+        configuration — so topology variants share the profile (replace()
+        carries the prepared fields over) instead of re-profiling.  Shard
+        counts must therefore match: a profile's op DAG is bound to its
+        per-shard resource names."""
+        if topology is not None and topology.num_shards != self.num_ps:
+            raise ValueError(
+                f"topology has {topology.num_shards} PS shard(s) but this "
+                f"run is set up for num_ps={self.num_ps}; build the base "
+                f"run with the matching num_ps (the profile's streams are "
+                f"bound to per-shard links)")
+        return replace(self, topology=topology)
+
     def _sim_cfg(self) -> SimConfig:
         plat = PLATFORMS[self.platform]
         if self.flow_control:
@@ -74,13 +107,22 @@ class PredictionRun:
             policy = "fifo" if self.order == "profiled" else "ordered"
         bw_model = self.bandwidth_model
         if bw_model is None:
-            bw_model = EqualShareModel() if self.num_ps == 1 else BandwidthModel()
+            if self.topology is not None:
+                # exact paper rules for a plain star, water-filling over
+                # the compiled capacity groups otherwise
+                bw_model = self.topology.bandwidth_model()
+            else:
+                bw_model = (EqualShareModel() if self.num_ps == 1
+                            else BandwidthModel())
         # burst-stall parameters: the fitted parse rate (Fig. 10 alpha)
         # and the platform RTT, both part of the paper's one-time
         # per-cluster calibration
         alpha = self.overhead.alpha if self.overhead else 0.0
         return SimConfig(
-            resources=ps_resources(plat.bandwidth, self.num_ps),
+            resources=(self.topology.resources(plat.bandwidth)
+                       if self.topology is not None
+                       else ps_resources(plat.bandwidth, self.num_ps)),
+            topology=self.topology,
             link_policy=policy,
             win=self.win_estimate or plat.win_mu,
             bandwidth_model=bw_model,
@@ -155,7 +197,7 @@ class PredictionRun:
             dnn, self.batch_size, plat, num_workers, num_ps=self.num_ps,
             steps=steps, seed=self.seed + seed_offset,
             flow_control=self.flow_control, order=self.order,
-            warmup_steps=self.warmup_steps)
+            warmup_steps=self.warmup_steps, topology=self.topology)
 
 
 def prediction_error(predicted: float, measured: float) -> float:

@@ -42,7 +42,9 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from .bandwidth import BandwidthModel, EqualShareModel
 from .events import (LINK, Chunk, LiveOp, ResourceSpec, StepTemplate, Trace)
+from .fluidlink import EqualShareLink
 from .schedulers import FifoScheduler, Scheduler, make_link_scheduler
+from .topology import Topology
 
 # A chunk completes when its remaining work is within this of zero — the
 # same effective threshold as the reference engine's per-event test
@@ -65,9 +67,14 @@ _K_LINK = 2      # a = link name, b = rate epoch; stale if epoch moved on
 _K_CONN = 3      # a = (worker, res) key, b = conn epoch (general mode)
 
 
+_LINK_POLICIES = ("http2", "fifo", "ordered")
+
+
 @dataclass
 class SimConfig:
-    resources: Dict[str, ResourceSpec]
+    # Either an explicit resource dict, or a Topology to compile one from
+    # (Topology.bandwidth must then be set).
+    resources: Optional[Dict[str, ResourceSpec]] = None
     link_policy: str = "http2"        # http2 | fifo | ordered
     win: float = 28e6                 # HTTP/2 flow-control window (bytes)
     bandwidth_model: Optional[BandwidthModel] = None
@@ -91,31 +98,72 @@ class SimConfig:
     # caveat), and this is what lets synchronized workers drift apart the
     # way Fig. 15/16 shows.  0 = paper-faithful deterministic sharing.
     service_jitter: float = 0.0
+    # Cluster structure (heterogeneous NICs, rack fabrics, PS placement).
+    # None = the paper's flat star; supplies resources, bandwidth model and
+    # compute speed factors unless those are given explicitly.
+    topology: Optional[Topology] = None
+    # Compute speed factors (1.0 = profiled machine): per worker index for
+    # 'worker'/'parse' ops, per resource name for PS update ops.
+    worker_speed: Optional[Dict[int, float]] = None
+    res_speed: Optional[Dict[str, float]] = None
 
     def __post_init__(self):
+        if self.resources is None:
+            if self.topology is None:
+                raise ValueError("SimConfig needs resources= or topology=")
+            self.resources = self.topology.resources()
+        if not self.resources:
+            raise ValueError("SimConfig.resources must not be empty")
+        if self.topology is not None:
+            # explicit resources must name the topology's links, or every
+            # compiled capacity group would silently match nothing
+            for p in range(self.topology.num_shards):
+                for d in ("downlink", "uplink"):
+                    name = self.topology.link_name(d, p)
+                    if name not in self.resources:
+                        raise ValueError(
+                            f"resources= is missing link {name!r} required "
+                            f"by the topology ({self.topology.num_shards} "
+                            f"PS shard(s)); pass matching resources or let "
+                            f"the topology compile them")
+        if self.topology is not None:
+            if self.worker_speed is None:
+                self.worker_speed = self.topology.worker_speeds() or None
+            if self.res_speed is None:
+                self.res_speed = self.topology.res_speeds() or None
         if self.bandwidth_model is None:
-            # Paper-faithful default: equal share per link (exact for 1 PS).
-            self.bandwidth_model = EqualShareModel()
-
-
-class _LinkState:
-    """Incremental processor-sharing state for one link resource."""
-
-    __slots__ = ("bandwidth", "V", "rate", "t_mat", "heap", "epoch", "active")
-
-    def __init__(self, bandwidth: float):
-        self.bandwidth = bandwidth
-        self.V = 0.0       # cumulative per-connection attained service
-        self.rate = 0.0    # current per-connection service rate (work/s)
-        self.t_mat = 0.0   # time V was last materialized
-        self.heap: List[Tuple[float, int, Tuple[int, str], Chunk]] = []
-        self.epoch = 0     # bumped whenever rate / membership changes
-        self.active: Set[int] = set()
-
-    def materialize(self, t: float) -> None:
-        if t > self.t_mat:
-            self.V += self.rate * (t - self.t_mat)
-            self.t_mat = t
+            if self.topology is not None:
+                self.bandwidth_model = self.topology.bandwidth_model()
+            else:
+                # Paper-faithful default: equal share (exact for 1 PS).
+                self.bandwidth_model = EqualShareModel()
+        if self.link_policy not in _LINK_POLICIES:
+            raise ValueError(
+                f"unknown link_policy {self.link_policy!r} "
+                f"(expected one of {_LINK_POLICIES})")
+        if self.win <= 0:
+            raise ValueError(
+                f"HTTP/2 flow-control window must be > 0 bytes, got "
+                f"{self.win} (pass win= a positive byte count)")
+        if self.steps_per_worker < 1:
+            raise ValueError(
+                f"steps_per_worker must be >= 1, got {self.steps_per_worker}")
+        if self.warmup_steps < 0:
+            raise ValueError(
+                f"warmup_steps must be >= 0, got {self.warmup_steps}")
+        for name, v in (("service_jitter", self.service_jitter),
+                        ("stall_alpha", self.stall_alpha),
+                        ("stall_rtt", self.stall_rtt)):
+            if v < 0:
+                raise ValueError(f"{name} must be >= 0, got {v}")
+        for w, s in (self.worker_speed or {}).items():
+            if s <= 0:
+                raise ValueError(
+                    f"worker {w}: compute speed must be > 0, got {s}")
+        for r, s in (self.res_speed or {}).items():
+            if s <= 0:
+                raise ValueError(
+                    f"resource {r!r}: compute speed must be > 0, got {s}")
 
 
 class Simulation:
@@ -138,6 +186,10 @@ class Simulation:
         if not steps:
             raise ValueError("need at least one profiled step")
         cfg = self.cfg
+        if cfg.topology is not None and num_workers > cfg.topology.num_workers:
+            raise ValueError(
+                f"simulating {num_workers} workers but the topology defines "
+                f"only {cfg.topology.num_workers} worker nodes")
         resources = self.resources
         rng = self.rng
         trace = Trace()
@@ -155,11 +207,28 @@ class Simulation:
                 else:
                     scheds[(w, rname)] = FifoScheduler()
 
-        links: Dict[str, _LinkState] = {
-            r: _LinkState(s.bandwidth)
+        links: Dict[str, EqualShareLink] = {
+            r: EqualShareLink(s.bandwidth)
             for r, s in resources.items() if s.kind == LINK
         }
         is_link = {r: s.kind == LINK for r, s in resources.items()}
+
+        # Per-(worker, resource) compute speed factors (topology mode); a
+        # compute chunk of d nominal seconds takes d / speed.  Empty in the
+        # default star (speed 1.0 everywhere) — zero-overhead path.
+        speed: Dict[Tuple[int, str], float] = {}
+        if cfg.worker_speed or cfg.res_speed:
+            for w in workers:
+                for rname, spec in resources.items():
+                    if spec.kind == LINK:
+                        continue
+                    s = 1.0
+                    if cfg.worker_speed and rname in ("worker", "parse"):
+                        s *= cfg.worker_speed.get(w, 1.0)
+                    if cfg.res_speed:
+                        s *= cfg.res_speed.get(rname, 1.0)
+                    if s != 1.0:
+                        speed[(w, rname)] = s
 
         running: Dict[Tuple[int, str], Chunk] = {}
         calendar: List[tuple] = []
@@ -267,8 +336,13 @@ class Simulation:
             else:
                 chunk.seq = next(start_seq)
                 running[key] = chunk
+                dur = chunk.remaining
+                if speed:
+                    sp = speed.get(key)
+                    if sp is not None:
+                        dur = dur / sp
                 heapq.heappush(calendar,
-                               (t + chunk.remaining, next(cal_seq),
+                               (t + dur, next(cal_seq),
                                 _K_COMPUTE, key, chunk))
             if chunk.op.start_time < 0:
                 chunk.op.start_time = t

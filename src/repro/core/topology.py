@@ -1,0 +1,402 @@
+"""Declarative cluster topology & placement, compiled for the predictors.
+
+The paper validates on flat star topologies: one switch, homogeneous NICs,
+each parameter server on its own node.  Real clusters have oversubscribed
+rack fabrics, heterogeneous NICs, and parameter servers that are sharded
+across nodes or colocated with workers.  This module makes that structure
+first-class:
+
+  * :class:`Node` — a machine with a NIC capacity and a compute speed
+    factor, optionally inside a rack;
+  * :class:`Rack` — a top-of-rack switch whose uplink to the core is
+    oversubscribed by a ratio (or capped explicitly);
+  * :class:`Placement` — PS shard -> node, including several shards on one
+    node (sharding) and shards on worker nodes (colocation);
+  * :class:`Topology` — the whole graph, with ``star()`` as the
+    paper-faithful default factory.
+
+Capacities are expressed in multiples of the *nominal* NIC bandwidth
+(``Topology.bandwidth``, bytes/s), matching the share convention of
+``repro.core.bandwidth``.
+
+A topology compiles down to:
+
+  * ``resources()``     — the simulator's resource dict (star-compatible
+    canonical names: ``downlink[:p]`` / ``uplink[:p]`` / ``ps[:p]``);
+  * ``grouped_model()`` — a :class:`TopologyBandwidthModel`, i.e. max-min
+    water-filling over the topology's capacity groups: per-link (home-node
+    NIC), per-worker NIC, per-node shared NIC for colocated/sharded hosts,
+    and per-rack-uplink (both directions);
+  * ``bandwidth_model()`` — like ``grouped_model()``, but falling back to
+    the paper's exact ``EqualShareModel`` / ``BandwidthModel`` when the
+    topology is a plain star (so the default path stays bit-identical to
+    the published rules);
+  * ``worker_speeds()`` / ``res_speeds()`` — compute speed factors for the
+    simulator's compute resources.
+
+Modeling choices (documented, deliberate): loopback transfers of a
+colocated shard still traverse the host's shared-NIC group (gRPC localhost
+serializes through the stack; this is the conservative choice), and rack
+fabrics are full-duplex with one capacity per direction.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Mapping, Optional, Sequence, Set, Tuple
+
+from .bandwidth import (BandwidthModel, Conn, EqualShareModel, _direction_of,
+                        two_level_groups, waterfill)
+from .events import ResourceSpec, ps_resources
+
+__all__ = ["Node", "Rack", "Placement", "Topology", "TopologyBandwidthModel"]
+
+
+@dataclass(frozen=True)
+class Node:
+    """One machine: NIC capacity and compute speed, both as factors of the
+    platform nominal (1.0 = the profiled machine)."""
+
+    name: str
+    nic: float = 1.0
+    speed: float = 1.0
+    rack: Optional[str] = None
+
+    def __post_init__(self):
+        if not self.name:
+            raise ValueError("node needs a non-empty name")
+        if self.nic <= 0:
+            raise ValueError(
+                f"node {self.name!r}: nic capacity must be > 0, got {self.nic}")
+        if self.speed <= 0:
+            raise ValueError(
+                f"node {self.name!r}: compute speed must be > 0, got {self.speed}")
+
+
+@dataclass(frozen=True)
+class Rack:
+    """A top-of-rack switch.  ``oversubscription`` r >= 1 means the uplink
+    to the core carries 1/r of the rack's aggregate NIC capacity;
+    ``uplink_capacity`` (multiples of nominal) overrides the ratio."""
+
+    name: str
+    oversubscription: float = 1.0
+    uplink_capacity: Optional[float] = None
+
+    def __post_init__(self):
+        if not self.name:
+            raise ValueError("rack needs a non-empty name")
+        if self.oversubscription < 1.0:
+            raise ValueError(
+                f"rack {self.name!r}: oversubscription must be >= 1 "
+                f"(got {self.oversubscription}); use uplink_capacity for "
+                f"over-provisioned fabrics")
+        if self.uplink_capacity is not None and self.uplink_capacity <= 0:
+            raise ValueError(
+                f"rack {self.name!r}: uplink_capacity must be > 0")
+
+
+@dataclass(frozen=True)
+class Placement:
+    """PS shard i lives on node ``shard_hosts[i]`` (a PS node or, for
+    colocation, a worker node).  Several shards may share one host."""
+
+    shard_hosts: Tuple[str, ...]
+
+    def __post_init__(self):
+        if not self.shard_hosts:
+            raise ValueError("placement needs at least one PS shard host")
+
+
+@dataclass(frozen=True)
+class Topology:
+    """The cluster graph.  Worker i (simulator index) runs on
+    ``workers[i]``; PS shards are placed by ``placement`` (default: shard i
+    on ``ps_nodes[i]``).  ``bandwidth`` is the nominal NIC rate in bytes/s
+    (None = take the platform's at compile time)."""
+
+    workers: Tuple[Node, ...]
+    ps_nodes: Tuple[Node, ...] = ()
+    racks: Tuple[Rack, ...] = ()
+    placement: Optional[Placement] = None
+    bandwidth: Optional[float] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "workers", tuple(self.workers))
+        object.__setattr__(self, "ps_nodes", tuple(self.ps_nodes))
+        object.__setattr__(self, "racks", tuple(self.racks))
+        if not self.workers:
+            raise ValueError("topology needs at least one worker node")
+        if self.bandwidth is not None and self.bandwidth <= 0:
+            raise ValueError(
+                f"nominal bandwidth must be > 0, got {self.bandwidth}")
+        names: Set[str] = set()
+        for n in self.workers + self.ps_nodes:
+            if n.name in names:
+                raise ValueError(f"duplicate node name {n.name!r}")
+            names.add(n.name)
+        rack_names = set()
+        for r in self.racks:
+            if r.name in rack_names:
+                raise ValueError(f"duplicate rack name {r.name!r}")
+            rack_names.add(r.name)
+        for n in self.workers + self.ps_nodes:
+            if n.rack is not None and n.rack not in rack_names:
+                raise ValueError(
+                    f"node {n.name!r} references unknown rack {n.rack!r}")
+        if self.placement is None and not self.ps_nodes:
+            raise ValueError(
+                "unplaced parameter servers: provide ps_nodes or an "
+                "explicit placement")
+        for h in self._shard_hosts():
+            if h not in names:
+                raise ValueError(
+                    f"PS shard placed on unknown node {h!r} "
+                    f"(known nodes: {sorted(names)})")
+
+    # ------------------------------------------------------------ structure
+
+    def _shard_hosts(self) -> Tuple[str, ...]:
+        if self.placement is not None:
+            return self.placement.shard_hosts
+        return tuple(n.name for n in self.ps_nodes)
+
+    @property
+    def num_workers(self) -> int:
+        return len(self.workers)
+
+    @property
+    def num_shards(self) -> int:
+        return len(self._shard_hosts())
+
+    def node(self, name: str) -> Node:
+        for n in self.workers + self.ps_nodes:
+            if n.name == name:
+                return n
+        raise KeyError(name)
+
+    def link_name(self, direction: str, shard: int) -> str:
+        return direction if self.num_shards == 1 else f"{direction}:{shard}"
+
+    def shard_host(self, shard: int) -> Node:
+        return self.node(self._shard_hosts()[shard])
+
+    def is_plain_star(self) -> bool:
+        """True when the topology adds no structure beyond the paper's
+        setting: no racks, homogeneous NICs, one dedicated node per shard."""
+        if self.racks:
+            return False
+        if any(n.nic != 1.0 for n in self.workers + self.ps_nodes):
+            return False
+        hosts = self._shard_hosts()
+        worker_names = {n.name for n in self.workers}
+        if any(h in worker_names for h in hosts):        # colocation
+            return False
+        return len(set(hosts)) == len(hosts)             # one shard per node
+
+    # -------------------------------------------------------------- factories
+
+    @classmethod
+    def star(cls, num_workers: int, num_ps: int = 1,
+             bandwidth: Optional[float] = None) -> "Topology":
+        """The paper's flat topology: one switch, homogeneous nodes, each PS
+        shard on its own dedicated node."""
+        if num_workers < 1:
+            raise ValueError(f"need >= 1 worker, got {num_workers}")
+        if num_ps < 1:
+            raise ValueError(f"need >= 1 parameter server, got {num_ps}")
+        return cls(
+            workers=tuple(Node(f"w{i}") for i in range(num_workers)),
+            ps_nodes=tuple(Node(f"ps{p}") for p in range(num_ps)),
+            bandwidth=bandwidth,
+        )
+
+    @classmethod
+    def racked(cls, num_workers: int, num_ps: int = 1,
+               racks: int = 2, oversubscription: float = 1.0,
+               bandwidth: Optional[float] = None,
+               worker_nic: float = 1.0, ps_nic: float = 1.0) -> "Topology":
+        """Two-tier fabric: nodes spread round-robin over ``racks`` racks,
+        each rack uplink oversubscribed by the given ratio."""
+        rs = tuple(Rack(f"r{k}", oversubscription=oversubscription)
+                   for k in range(racks))
+        ws = tuple(Node(f"w{i}", nic=worker_nic, rack=f"r{i % racks}")
+                   for i in range(num_workers))
+        ps = tuple(Node(f"ps{p}", nic=ps_nic, rack=f"r{p % racks}")
+                   for p in range(num_ps))
+        return cls(workers=ws, ps_nodes=ps, racks=rs, bandwidth=bandwidth)
+
+    def with_placement(self, shard_hosts: Sequence[str]) -> "Topology":
+        return Topology(workers=self.workers, ps_nodes=self.ps_nodes,
+                        racks=self.racks,
+                        placement=Placement(tuple(shard_hosts)),
+                        bandwidth=self.bandwidth)
+
+    # ---------------------------------------------------------- compilation
+
+    def resources(self, default_bandwidth: Optional[float] = None
+                  ) -> Dict[str, ResourceSpec]:
+        """The simulator's resource dict — identical names, order, and
+        specs to ``events.ps_resources`` (heterogeneity lives in the
+        bandwidth model's capacity groups, not in the per-link specs).
+
+        An explicit ``Topology.bandwidth`` wins over ``default_bandwidth``
+        (the platform's nominal rate) — the same precedence the cluster
+        emulator applies, so predictions and ground truth always describe
+        the same cluster."""
+        bw = self.bandwidth if self.bandwidth is not None else default_bandwidth
+        if bw is None:
+            raise ValueError(
+                "topology has no nominal bandwidth; pass default_bandwidth= "
+                "to resources() or set Topology.bandwidth")
+        return ps_resources(bw, self.num_shards)
+
+    def grouped_model(self) -> "TopologyBandwidthModel":
+        return TopologyBandwidthModel(self)
+
+    def bandwidth_model(self) -> BandwidthModel:
+        """The cheapest model that is exact for this topology: the paper's
+        published rules for a plain star, general water-filling otherwise."""
+        if self.is_plain_star():
+            return EqualShareModel() if self.num_shards == 1 \
+                else BandwidthModel()
+        return self.grouped_model()
+
+    def worker_speeds(self) -> Dict[int, float]:
+        """Worker index -> compute speed factor (only non-1.0 entries)."""
+        return {i: n.speed for i, n in enumerate(self.workers)
+                if n.speed != 1.0}
+
+    def res_speeds(self) -> Dict[str, float]:
+        """Compute resource name -> speed factor of its host node (PS
+        update ops run where the shard lives; only non-1.0 entries)."""
+        out: Dict[str, float] = {}
+        for p in range(self.num_shards):
+            host = self.shard_host(p)
+            if host.speed != 1.0:
+                out[self.link_name("ps", p)] = host.speed
+        return out
+
+
+class TopologyBandwidthModel(BandwidthModel):
+    """Max-min water-filling over a topology's capacity groups.
+
+    Groups, all in multiples of the nominal NIC bandwidth:
+
+      * per active link resource: the shard host's NIC capacity — the
+        direct generalization of the paper's per-PS-link constraint;
+      * per (worker, direction): the worker node's NIC capacity;
+      * per node hosting several link sources in one physical direction
+        (multiple shards, or a shard colocated with a worker): one shared
+        group at the node's NIC capacity, covering the shard links homed
+        there plus the host worker's own transfers in that direction;
+      * per rack and direction: the rack uplink, at aggregate member NIC
+        capacity / oversubscription (or the explicit uplink capacity),
+        covering every connection that crosses the rack boundary.
+
+    For a plain star the group set degenerates to exactly the two-level
+    {per-link, per-worker-NIC} structure of :class:`BandwidthModel`.
+    """
+
+    def __init__(self, topology: Topology):
+        super().__init__()
+        self.topology = topology
+        M = topology.num_shards
+        dl = [topology.link_name("downlink", p) for p in range(M)]
+        ul = [topology.link_name("uplink", p) for p in range(M)]
+
+        # per-link capacity = shard host NIC
+        self.link_caps: Dict[str, float] = {}
+        for p in range(M):
+            nic = topology.shard_host(p).nic
+            self.link_caps[dl[p]] = nic
+            self.link_caps[ul[p]] = nic
+        # per-worker NIC capacity
+        self.worker_caps: Dict[int, float] = {
+            i: n.nic for i, n in enumerate(topology.workers)}
+
+        # shared-NIC groups for nodes hosting >= 2 link sources per
+        # direction (sharded PS hosts, colocated PS+worker)
+        worker_idx = {n.name: i for i, n in enumerate(topology.workers)}
+        hosted: Dict[str, List[int]] = {}
+        for p in range(M):
+            hosted.setdefault(topology.shard_host(p).name, []).append(p)
+        # (key, capacity, frozenset of link names, worker index or None,
+        #  worker-side direction) per physical direction of the node
+        self.node_groups: List[tuple] = []
+        for name, shards in hosted.items():
+            w = worker_idx.get(name)
+            if len(shards) < 2 and w is None:
+                continue   # single dedicated shard: the link group suffices
+            nic = topology.node(name).nic
+            tx_links = frozenset(dl[p] for p in shards)
+            rx_links = frozenset(ul[p] for p in shards)
+            self.node_groups.append(
+                (("node", name, "tx"), nic, tx_links, w, "uplink"))
+            self.node_groups.append(
+                (("node", name, "rx"), nic, rx_links, w, "downlink"))
+
+        # rack uplink groups: (key, capacity, member workers, member links,
+        # direction handled dynamically in shares())
+        self.rack_groups: List[tuple] = []
+        for rack in topology.racks:
+            member_nodes = [n for n in topology.workers + topology.ps_nodes
+                            if n.rack == rack.name]
+            if not member_nodes:
+                continue
+            cap = rack.uplink_capacity
+            if cap is None:
+                cap = sum(n.nic for n in member_nodes) / rack.oversubscription
+            rworkers = frozenset(worker_idx[n.name] for n in member_nodes
+                                 if n.name in worker_idx)
+            rlinks = frozenset(
+                l for p in range(M) for l in (dl[p], ul[p])
+                if topology.shard_host(p).rack == rack.name)
+            self.rack_groups.append((rack.name, cap, rworkers, rlinks))
+
+    def shares(self, active: Mapping[str, Set[int]]) -> Dict[Conn, float]:
+        conns = [(w, r) for r, ws in active.items() for w in ws]
+        if not conns:
+            return {}
+        caps, members = self.groups_for(conns)
+        return waterfill(conns, caps, members)
+
+    def groups_for(self, conns: Sequence[Conn]
+                   ) -> Tuple[Dict[object, float], Dict[object, list]]:
+        """Caps/members over an explicit connection list.  ``shares()``
+        feeds this to unweighted water-filling; the emulator's fabric pool
+        reuses it with per-flow weights."""
+        caps, members = two_level_groups(
+            conns, self.link_caps, self.worker_caps,
+            default_link_cap=self.link_capacity,
+            default_worker_cap=self.worker_nic_capacity)
+
+        for key, cap, links, w_host, w_dir in self.node_groups:
+            ms = [c for c in conns
+                  if c[1] in links
+                  or (c[0] == w_host and _direction_of(c[1]) == w_dir)]
+            if ms:
+                caps[key] = cap
+                members[key] = ms
+
+        for rname, cap, rworkers, rlinks in self.rack_groups:
+            # full duplex: one group per fabric direction.  A connection
+            # crosses the rack iff exactly one endpoint is inside; it rides
+            # the egress group if the transmitter is inside, the ingress
+            # group if the receiver is.
+            egress, ingress = [], []
+            for c in conns:
+                w, r = c
+                w_in = w in rworkers
+                l_in = r in rlinks
+                if w_in == l_in:
+                    continue               # intra-rack or fully outside
+                # downlink: shard host transmits; uplink: worker transmits
+                tx_in = l_in if _direction_of(r) == "downlink" else w_in
+                (egress if tx_in else ingress).append(c)
+            if egress:
+                caps[("rack", rname, "egress")] = cap
+                members[("rack", rname, "egress")] = egress
+            if ingress:
+                caps[("rack", rname, "ingress")] = cap
+                members[("rack", rname, "ingress")] = ingress
+        return caps, members

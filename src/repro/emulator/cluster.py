@@ -19,7 +19,16 @@ the predictor and with dynamics the predictor does NOT observe:
 It produces (a) TF-style 1-worker profiling traces — comm ops recorded with
 request-time starts and parse-end ends — and (b) measured multi-worker
 throughput.  The predictor only ever sees (a); validation compares against
-(b).  The emulator shares no scheduling code with `repro.core.simulator`.
+(b).  The emulator shares no *scheduling* code with `repro.core.simulator`
+— only the generic fluid-link clock kernel (`repro.core.fluidlink`) and,
+in topology mode, the water-filling allocator (`repro.core.bandwidth`).
+
+With a :class:`~repro.core.topology.Topology` the per-PS independent links
+are replaced by one shared-rate pool over the topology's capacity groups
+(worker NICs, shard-host NICs, colocated NICs, rack uplinks): weighted
+max-min rates recomputed on every membership change, per-flow projections
+epoch-tagged — the emulator counterpart of the simulator's general
+per-connection path.
 """
 from __future__ import annotations
 
@@ -31,8 +40,11 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
+from repro.core.bandwidth import waterfill
+from repro.core.fluidlink import Flow, WeightedFluidLink
 from repro.core.overhead import RecordedOp, RecordedStep
 from repro.core.paper_models import DnnSpec, Platform
+from repro.core.topology import Topology, TopologyBandwidthModel
 from repro.profiling.tracer import build_job_step
 
 _seq = itertools.count()
@@ -52,75 +64,111 @@ class _Stream:
     enqueue_time: float = 0.0
 
 
-@dataclass
-class _Flow:
-    """A fluid flow on a link (one active burst, or background traffic)."""
+class _Fabric:
+    """Shared-rate pool over a topology's capacity groups (topology mode).
 
-    fid: int
-    weight: float
-    remaining: float            # bytes; inf for background flows
-    on_complete: Optional[Callable[[], None]] = None
-
-
-class _Link:
-    """Weighted processor-sharing link with an incremental virtual clock.
-
-    Every flow on the link receives service at ``B * w_i / total_w``, i.e.
-    all flows share one per-unit-weight rate ``B / total_w``.  The link
-    keeps a cumulative per-unit-weight service clock ``U``; a finite flow
-    starting with ``r`` bytes and weight ``w`` completes when ``U`` reaches
-    ``u_target = U(start) + r / w`` — valid across any number of membership
-    (and hence rate) changes without touching per-flow state.  Projections
-    of the earliest completion onto real time are tagged with a rate epoch
-    and lazily invalidated, exactly like ``repro.core.simulator``.
+    Independent per-link virtual clocks cannot express constraints that
+    span links (a rack uplink, a colocated PS/worker NIC), so here every
+    active flow is registered with its (worker, link) connection and rates
+    come from weighted max-min water-filling over the compiled group set.
+    Any membership change re-materializes remaining work at the old rates
+    and re-projects every finite flow under the new ones; projections carry
+    a pool epoch and are lazily dropped when stale.
     """
 
-    def __init__(self, bandwidth: float):
-        self.bandwidth = bandwidth
-        self.flows: Dict[int, _Flow] = {}
-        self.total_w = 0.0
-        self.U = 0.0               # per-unit-weight attained service
-        self.t_mat = 0.0           # time U was last materialized
-        self.heap: List[Tuple[float, int, _Flow]] = []   # finite flows
+    def __init__(self, emu: "ClusterEmulator", model: TopologyBandwidthModel,
+                 bandwidth: float):
+        self.emu = emu
+        self.model = model
+        self.bandwidth = bandwidth      # nominal NIC rate, bytes/s
+        self.flows: Dict[int, Flow] = {}
+        self.conn: Dict[int, Tuple[int, str]] = {}
+        self.rate: Dict[int, float] = {}
+        self.t_mat: Dict[int, float] = {}
         self.epoch = 0
 
-    def materialize(self, t: float) -> None:
-        if t > self.t_mat:
-            if self.total_w > 0:
-                self.U += self.bandwidth / self.total_w * (t - self.t_mat)
-            self.t_mat = t
-
-    def add_flow(self, t: float, flow: _Flow) -> None:
-        self.materialize(t)
+    def add_flow(self, t: float, flow: Flow, conn: Tuple[int, str]) -> None:
         self.flows[flow.fid] = flow
-        self.total_w += flow.weight
-        self.epoch += 1
-        if math.isfinite(flow.remaining):
-            heapq.heappush(self.heap,
-                           (self.U + flow.remaining / flow.weight,
-                            flow.fid, flow))
+        self.conn[flow.fid] = conn
+        self.rate[flow.fid] = 0.0
+        self.t_mat[flow.fid] = t
+        self._rebalance(t)
 
     def remove_flow(self, t: float, fid: int) -> None:
-        flow = self.flows.pop(fid, None)
-        if flow is None:
+        if self.flows.pop(fid, None) is None:
             return
-        self.materialize(t)
-        self.total_w -= flow.weight
-        if self.total_w < 1e-12:
-            self.total_w = sum(f.weight for f in self.flows.values())
-        self.epoch += 1
-        # finite flows leave the heap lazily (checked against self.flows)
+        del self.conn[fid], self.rate[fid], self.t_mat[fid]
+        self._rebalance(t)
 
-    def next_projection(self, t: float) -> Optional[float]:
-        """Real time of the earliest completion under the current rate."""
-        heap = self.heap
-        while heap and heap[0][2].fid not in self.flows:
-            heapq.heappop(heap)   # flow was force-removed; drop lazily
-        if not heap or self.total_w <= 0:
-            return None
-        self.materialize(t)
-        dt = (heap[0][0] - self.U) * self.total_w / self.bandwidth
-        return t + (dt if dt > 0.0 else 0.0)
+    def _rebalance(self, t: float) -> None:
+        """Materialize remaining work at the old rates, recompute weighted
+        max-min shares, and project only the pool's EARLIEST completion
+        (one epoch-tagged timer entry per membership change, not one per
+        flow — the pool-level analogue of ``WeightedFluidLink``'s single
+        link projection)."""
+        self.epoch += 1
+        if not self.flows:
+            return
+        conns: List[Tuple[int, str]] = []
+        weights: Dict[Tuple[int, str], float] = {}
+        by_conn: Dict[Tuple[int, str], int] = {}
+        for fid, flow in self.flows.items():
+            c = self.conn[fid]
+            conns.append(c)
+            weights[c] = flow.weight
+            by_conn[c] = fid
+        caps, members = self.model.groups_for(conns)
+        shares = waterfill(conns, caps, members, weights=weights)
+        earliest = None
+        for c, s in shares.items():
+            fid = by_conn[c]
+            flow = self.flows[fid]
+            r_old = self.rate[fid]
+            if math.isfinite(flow.remaining):
+                if r_old > 0.0:
+                    flow.remaining -= r_old * (t - self.t_mat[fid])
+                    if flow.remaining < 0.0:
+                        flow.remaining = 0.0
+                r_new = s * self.bandwidth
+                if r_new > 0.0:
+                    tc = t + flow.remaining / r_new
+                    if earliest is None or tc < earliest:
+                        earliest = tc
+            else:
+                r_new = s * self.bandwidth
+            self.t_mat[fid] = t
+            self.rate[fid] = r_new
+        if earliest is not None:
+            heapq.heappush(self.emu.timers,
+                           (earliest if earliest > t else t, next(_seq),
+                            ("flow", None, self.epoch)))
+
+    def flow_event(self, epoch: int) -> None:
+        if epoch != self.epoch:
+            return                      # rates moved on; projection stale
+        t = self.emu.t
+        # due = flows whose (unchanged-rate) completion time has arrived;
+        # the projection arithmetic is replayed exactly, so the flow that
+        # defined the projection always qualifies
+        due: List[Tuple[float, int]] = []
+        for fid, flow in self.flows.items():
+            if not math.isfinite(flow.remaining):
+                continue
+            r = self.rate[fid]
+            if r <= 0.0:
+                continue
+            tc = self.t_mat[fid] + flow.remaining / r
+            if tc <= t + 1e-15 + t * 1e-12:
+                due.append((tc, fid))
+        due.sort()
+        done: List[Flow] = []
+        for _tc, fid in due:
+            done.append(self.flows.pop(fid))
+            del self.conn[fid], self.rate[fid], self.t_mat[fid]
+        self._rebalance(t)
+        for flow in done:
+            if flow.on_complete:
+                flow.on_complete()
 
 
 class _Conn:
@@ -138,10 +186,26 @@ class ClusterEmulator:
     def __init__(self, dnn: DnnSpec, batch_size: int, platform: Platform,
                  num_workers: int, num_ps: int = 1, seed: int = 0,
                  flow_control: bool = True, order: str = "profiled",
-                 record_profile: bool = False):
+                 record_profile: bool = False,
+                 topology: Optional[Topology] = None):
         self.dnn = dnn
         self.batch_size = batch_size
         self.platform = platform
+        self.topology = topology
+        if topology is not None:
+            if num_workers > topology.num_workers:
+                raise ValueError(
+                    f"emulating {num_workers} workers but the topology "
+                    f"defines only {topology.num_workers} worker nodes")
+            if num_ps not in (1, topology.num_shards):
+                # same contract as PredictionRun: the topology owns the
+                # shard count; an explicit conflicting num_ps is an error,
+                # not a silent override
+                raise ValueError(
+                    f"num_ps={num_ps} conflicts with topology "
+                    f"({topology.num_shards} PS shard(s)); omit num_ps or "
+                    f"make them match")
+            num_ps = topology.num_shards
         self.W = num_workers
         self.M = num_ps
         self.rng = random.Random(seed)
@@ -156,14 +220,28 @@ class ClusterEmulator:
 
         # event machinery
         self.t = 0.0
-        # unified calendar: (time, seq, callback | ("link", lid, epoch))
+        # unified calendar: (time, seq, callback | ("link", lid, epoch)
+        #                    | ("flow", fid, epoch) in topology mode)
         self.timers: List[Tuple[float, int, object]] = []
-        self.links: Dict[str, _Link] = {}
+        self.links: Dict[str, WeightedFluidLink] = {}
         self.conns: Dict[Tuple[int, str], _Conn] = {}
+        self.fabric: Optional[_Fabric] = None
+        self.worker_speed: Optional[Dict[int, float]] = None
+        self.ps_speed: Optional[Dict[int, float]] = None
+        if topology is not None:
+            nominal = topology.bandwidth or platform.bandwidth
+            self.fabric = _Fabric(self, topology.grouped_model(), nominal)
+            self.worker_speed = {i: n.speed
+                                 for i, n in enumerate(topology.workers)}
+            self.ps_speed = {p: topology.shard_host(p).speed
+                             for p in range(num_ps)}
+        self._lids: List[str] = []
         for p in range(num_ps):
             for direction in ("downlink", "uplink"):
                 lid = direction if num_ps == 1 else f"{direction}:{p}"
-                self.links[lid] = _Link(platform.bandwidth)
+                self._lids.append(lid)
+                if self.fabric is None:
+                    self.links[lid] = WeightedFluidLink(platform.bandwidth)
                 for w in range(num_workers):
                     self.conns[(w, lid)] = _Conn()
 
@@ -195,7 +273,7 @@ class ClusterEmulator:
 
         # background traffic
         if platform.bg_rate > 0:
-            for lid in self.links:
+            for lid in self._lids:
                 self._schedule_bg_arrival(lid)
 
     # ------------------------------------------------------------------ utils
@@ -208,6 +286,14 @@ class ClusterEmulator:
             return 1.0
         mu = -0.5 * sigma * sigma  # mean 1.0
         return math.exp(self.rng.gauss(mu, sigma))
+
+    def _wspeed(self, w: int) -> float:
+        """Compute speed factor of worker ``w``'s node (topology mode)."""
+        return self.worker_speed.get(w, 1.0) if self.worker_speed else 1.0
+
+    def _psspeed(self, p: int) -> float:
+        """Compute speed factor of PS shard ``p``'s host (topology mode)."""
+        return self.ps_speed.get(p, 1.0) if self.ps_speed else 1.0
 
     def _draw_win(self, conn: _Conn) -> float:
         p = self.platform
@@ -232,24 +318,8 @@ class ClusterEmulator:
         link = self.links[lid]
         if epoch != link.epoch:
             return                      # rate moved on; projection is stale
-        link.materialize(self.t)
-        lim = link.U + 1e-9 + link.U * 1e-12
-        heap = link.heap
-        done: List[_Flow] = []
-        while heap and (heap[0][2].fid not in link.flows
-                        or heap[0][0] <= lim):
-            _u, fid, flow = heapq.heappop(heap)
-            if fid in link.flows:
-                done.append(flow)
+        done = link.pop_due(self.t)
         if done:
-            for flow in done:
-                del link.flows[flow.fid]
-                link.total_w -= flow.weight
-            if not link.flows:
-                link.total_w = 0.0
-            elif link.total_w < 1e-12:
-                link.total_w = sum(f.weight for f in link.flows.values())
-            link.epoch += 1
             epoch_before_cbs = link.epoch
             for flow in done:
                 if flow.on_complete:
@@ -269,16 +339,24 @@ class ClusterEmulator:
 
     def _bg_arrive(self, lid: str) -> None:
         p = self.platform
-        flow = _Flow(fid=next(_seq), weight=1.0, remaining=math.inf)
-        self.links[lid].add_flow(self.t, flow)
-        self._schedule_link(lid)
+        flow = Flow(fid=next(_seq), weight=1.0, remaining=math.inf)
+        if self.fabric is not None:
+            # background traffic rides the same constraint groups as the
+            # training flows (unique pseudo-worker: its own NIC group)
+            self.fabric.add_flow(self.t, flow, (-flow.fid - 1, lid))
+        else:
+            self.links[lid].add_flow(self.t, flow)
+            self._schedule_link(lid)
         dur = self.rng.expovariate(1.0 / p.bg_mean_duration)
         self._timer(dur, lambda: self._bg_depart(lid, flow.fid))
         self._schedule_bg_arrival(lid)
 
     def _bg_depart(self, lid: str, fid: int) -> None:
-        self.links[lid].remove_flow(self.t, fid)
-        self._schedule_link(lid)
+        if self.fabric is not None:
+            self.fabric.remove_flow(self.t, fid)
+        else:
+            self.links[lid].remove_flow(self.t, fid)
+            self._schedule_link(lid)
 
     # --------------------------------------------------------- op lifecycle
 
@@ -300,7 +378,8 @@ class ClusterEmulator:
             self._worker_kick(w)
         elif res.startswith("ps"):
             p = 0 if res == "ps" else int(res.split(":")[1])
-            dur = (op.end - op.start) * self._lognorm(self.platform.noise_compute)
+            dur = (op.end - op.start) * self._lognorm(
+                self.platform.noise_compute) / self._psspeed(p)
             self.ps_q[(w, p)].append(("update", op_idx, self.completed_steps[w], dur))
             self._ps_kick(w, p)
         else:
@@ -326,7 +405,8 @@ class ClusterEmulator:
         op_idx, _seq_ = self.worker_q[w].popleft()
         op = self.ops[op_idx]
         self.worker_busy[w] = True
-        dur = (op.end - op.start) * self._lognorm(self.platform.noise_compute)
+        dur = (op.end - op.start) * self._lognorm(
+            self.platform.noise_compute) / self._wspeed(w)
         if self.record_profile:
             self.current_records[w][op_idx].start = self.t
 
@@ -350,7 +430,7 @@ class ClusterEmulator:
         self.parse_busy[w] = True
         p = self.platform
         dur = (p.overhead_alpha * size + p.overhead_beta) * self._lognorm(
-            p.noise_compute)
+            p.noise_compute) / self._wspeed(w)
 
         def done():
             self.parse_busy[w] = False
@@ -403,7 +483,7 @@ class ClusterEmulator:
             burst = stream.remaining
             preempt = False
         weight = self._lognorm(p.noise_bandwidth)
-        flow = _Flow(fid=next(_seq), weight=weight, remaining=burst)
+        flow = Flow(fid=next(_seq), weight=weight, remaining=burst)
 
         def burst_done():
             stream.remaining -= burst
@@ -423,8 +503,11 @@ class ClusterEmulator:
             self._conn_kick(conn, lid)
 
         flow.on_complete = burst_done
-        self.links[lid].add_flow(self.t, flow)
-        self._schedule_link(lid)
+        if self.fabric is not None:
+            self.fabric.add_flow(self.t, flow, (stream.worker, lid))
+        else:
+            self.links[lid].add_flow(self.t, flow)
+            self._schedule_link(lid)
 
     def _stream_complete(self, stream: _Stream, lid: str) -> None:
         w = stream.worker
@@ -437,7 +520,7 @@ class ClusterEmulator:
             p = 0 if lid == "uplink" else int(lid.split(":")[1])
             plat = self.platform
             dur = (plat.overhead_alpha * stream.size + plat.overhead_beta) \
-                * self._lognorm(plat.noise_compute)
+                * self._lognorm(plat.noise_compute) / self._psspeed(p)
             self.ps_q[(w, p)].append(("parse", op_idx, stream.step_seq, dur))
             self._ps_kick(w, p)
 
@@ -499,8 +582,11 @@ class ClusterEmulator:
             t_next, _s, item = heapq.heappop(timers)
             if t_next > self.t:
                 self.t = t_next
-            if type(item) is tuple:       # ("link", lid, epoch) projection
-                self._link_event(item[1], item[2])
+            if type(item) is tuple:       # ("link"|"flow", id, epoch)
+                if item[0] == "link":
+                    self._link_event(item[1], item[2])
+                else:
+                    self.fabric.flow_event(item[2])
             else:
                 item()
 
@@ -548,11 +634,12 @@ def measure_throughput(dnn: DnnSpec, batch_size: int, platform: Platform,
                        num_workers: int, num_ps: int = 1, steps: int = 100,
                        seed: int = 0, flow_control: bool = True,
                        order: str = "profiled",
-                       warmup_steps: int = 50) -> float:
+                       warmup_steps: int = 50,
+                       topology: Optional[Topology] = None) -> float:
     """Ground-truth measurement (the paper's 'real cluster' datapoint)."""
     emu = ClusterEmulator(dnn, batch_size, platform, num_workers=num_workers,
                           num_ps=num_ps, seed=seed, flow_control=flow_control,
-                          order=order)
+                          order=order, topology=topology)
     emu.run(steps_per_worker=steps)
     return emu.throughput(warmup_steps=warmup_steps)
 

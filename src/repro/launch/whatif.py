@@ -1,8 +1,10 @@
-"""What-if analysis: the paper's technique as a deployment tool on TPU.
+"""What-if analysis: the paper's technique as a deployment tool.
 
 The paper's original use-case (§1, §6 [10]) is letting a *scheduler* predict
-throughput for configurations it never ran.  Here the same DES predicts TPU
-step time for deployment questions the dry-run alone cannot answer:
+throughput for configurations it never ran.  Here the same DES answers
+deployment questions the dry-run alone cannot — in two modes.
+
+TPU mode (default):
 
     PYTHONPATH=src python -m repro.launch.whatif --arch granite-8b \
         --pods 1 2 4 8 --straggler 1.3 --compress 0.25
@@ -15,6 +17,14 @@ step time for deployment questions the dry-run alone cannot answer:
   * chunked collectives (--win bytes): the paper's HTTP/2 WIN model mapped
     to collective chunking — smaller chunks interleave with compute
     earlier at the cost of per-chunk latency.
+
+PS-cluster mode (``--ps-cluster``): profile once, then predict throughput
+under cluster structures the paper never ran — oversubscribed rack
+fabrics, heterogeneous PS NICs, PS colocated with worker 0:
+
+    PYTHONPATH=src python -m repro.launch.whatif --ps-cluster \
+        --dnn alexnet --batch 8 --workers 1 2 4 8 \
+        --num-ps 2 --oversub 4 --ps-nic 2.0 --colocate-ps
 """
 from __future__ import annotations
 
@@ -45,6 +55,68 @@ def _pods_task(args: tuple) -> tuple:
     return (pods, mesh.chips, t, t_st, t_c)
 
 
+def build_whatif_topology(num_workers: int, num_ps: int,
+                          oversub: float = 1.0, racks: int = 2,
+                          ps_nic: float = 1.0,
+                          colocate_ps: bool = False):
+    """CLI knobs -> Topology.  Oversubscribed fabrics isolate the PS
+    shards in rack r0 (workers fill the remaining racks); ``colocate_ps``
+    moves shard 0 onto worker 0's node (the dedicated host for shard 0 is
+    dropped entirely so its NIC doesn't inflate rack r0's uplink
+    capacity)."""
+    from repro.core.topology import Node, Placement, Rack, Topology
+    # with colocation, dedicated hosts exist only for shards 1..M-1
+    dedicated = range(1 if colocate_ps else 0, num_ps)
+    if oversub > 1.0 and colocate_ps and num_ps == 1:
+        raise ValueError(
+            "--oversub with --colocate-ps and --num-ps 1 leaves no PS "
+            "behind the oversubscribed fabric (the only shard lives on "
+            "worker 0): the ratio would be a silent no-op.  Use more "
+            "shards or drop one of the flags.")
+    if oversub > 1.0:
+        rack_objs = tuple([Rack("r0", oversubscription=oversub)] +
+                          [Rack(f"r{k}") for k in range(1, max(racks, 2))])
+        nworker_racks = len(rack_objs) - 1
+        workers = tuple(Node(f"w{i}", rack=f"r{1 + i % nworker_racks}")
+                        for i in range(num_workers))
+        ps_nodes = tuple(Node(f"ps{p}", nic=ps_nic, rack="r0")
+                         for p in dedicated)
+    else:
+        rack_objs = ()
+        workers = tuple(Node(f"w{i}") for i in range(num_workers))
+        ps_nodes = tuple(Node(f"ps{p}", nic=ps_nic) for p in dedicated)
+    placement = None
+    if colocate_ps:
+        placement = Placement(("w0",) + tuple(n.name for n in ps_nodes))
+    return Topology(workers=workers, ps_nodes=ps_nodes, racks=rack_objs,
+                    placement=placement)
+
+
+def ps_cluster_main(args) -> None:
+    from repro.core.predictor import PredictionRun
+    from repro.core.sweep import predict_many
+    from repro.core.topology import Topology
+
+    wmax = max(args.workers)
+    base = PredictionRun(dnn=args.dnn, batch_size=args.batch,
+                         platform=args.cluster_platform, num_ps=args.num_ps,
+                         profile_steps=args.profile_steps,
+                         sim_steps=args.sim_steps).prepare()
+    topo = build_whatif_topology(wmax, args.num_ps, oversub=args.oversub,
+                                 racks=args.racks, ps_nic=args.ps_nic,
+                                 colocate_ps=args.colocate_ps)
+    pred_star = predict_many(
+        base.with_topology(Topology.star(wmax, args.num_ps)), args.workers)
+    pred_topo = predict_many(base.with_topology(topo), args.workers)
+    print(f"# {args.dnn} bs={args.batch} on {args.cluster_platform}: "
+          f"M={args.num_ps} oversub={args.oversub} ps_nic={args.ps_nic} "
+          f"colocate={args.colocate_ps}")
+    print(f"{'W':>3s} {'star_ex/s':>10s} {'topo_ex/s':>10s} {'ratio':>6s}")
+    for w in args.workers:
+        s, t = pred_star[w], pred_topo[w]
+        print(f"{w:3d} {s:10.2f} {t:10.2f} {t / s if s else 0:6.2f}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="granite-8b")
@@ -56,7 +128,30 @@ def main() -> None:
     ap.add_argument("--win", type=float, default=0.0,
                     help="collective chunk bytes (0 = unchunked)")
     ap.add_argument("--mfu", type=float, default=0.5)
+    # PS-cluster topology mode
+    ap.add_argument("--ps-cluster", action="store_true",
+                    help="PS-training what-if over cluster topologies "
+                         "instead of the TPU adapter")
+    ap.add_argument("--dnn", default="alexnet")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--cluster-platform", default="private_cpu")
+    ap.add_argument("--workers", type=int, nargs="+", default=[1, 2, 4, 8])
+    ap.add_argument("--num-ps", type=int, default=1)
+    ap.add_argument("--oversub", type=float, default=1.0,
+                    help="rack-uplink oversubscription ratio (>1 isolates "
+                         "the PS shards behind one rack fabric)")
+    ap.add_argument("--racks", type=int, default=2)
+    ap.add_argument("--ps-nic", type=float, default=1.0,
+                    help="PS NIC capacity in multiples of the nominal")
+    ap.add_argument("--colocate-ps", action="store_true",
+                    help="place PS shard 0 on worker 0's node")
+    ap.add_argument("--profile-steps", type=int, default=30)
+    ap.add_argument("--sim-steps", type=int, default=250)
     args = ap.parse_args()
+
+    if args.ps_cluster:
+        ps_cluster_main(args)
+        return
 
     print(f"{'pods':>5s} {'chips':>6s} {'step_time':>10s} {'rel_tput':>9s} "
           f"{'straggler':>10s} {'compressed':>11s}")

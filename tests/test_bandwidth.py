@@ -1,10 +1,11 @@
-"""Bandwidth sharing (paper §3.1 single PS, §5 two PS) + water-filling."""
-import math
-
+"""Bandwidth sharing (paper §3.1 single PS, §5 two PS) + water-filling,
+including the generalized allocator over arbitrary capacity groups."""
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core.bandwidth import BandwidthModel, EqualShareModel
+from repro.core.bandwidth import (BandwidthModel, EqualShareModel,
+                                  GroupedBandwidthModel, waterfill)
+from repro.core.topology import Topology
 
 
 class TestEqualShare:
@@ -77,3 +78,149 @@ class TestWaterFilling:
             link_total = sum(shares[(w2, link)] for w2 in active[link])
             nic_total = nic[(w, d)]
             assert (link_total >= 1.0 - 1e-6) or (nic_total >= 1.0 - 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Generalized allocator: arbitrary nested capacity groups
+# ---------------------------------------------------------------------------
+
+# Random group structures: N connections, each always covered by its own
+# "link" group, plus random overlapping extra groups with random capacities.
+_conn_st = st.integers(0, 7)
+_groups_st = st.lists(
+    st.tuples(st.sets(_conn_st, min_size=1, max_size=8),
+              st.floats(0.1, 4.0)),
+    min_size=0, max_size=5)
+
+
+def _build(conn_ids, extra_groups):
+    conns = [(c, f"downlink:{c % 3}") for c in sorted(conn_ids)]
+    by_id = {c[0]: c for c in conns}
+    caps, members = {}, {}
+    for i, c in enumerate(conns):
+        caps[("own", i)] = 1.0
+        members[("own", i)] = [c]
+    for gi, (ids, cap) in enumerate(extra_groups):
+        ms = [by_id[i] for i in sorted(ids) if i in by_id]
+        if ms:
+            caps[("extra", gi)] = cap
+            members[("extra", gi)] = ms
+    return conns, caps, members
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.sets(_conn_st, min_size=1, max_size=8), _groups_st)
+def test_waterfill_feasible_and_pareto(conn_ids, extra_groups):
+    """Properties over arbitrary nested groups: (a) feasibility — no group
+    over capacity; (b) positivity; (c) bottleneck saturation / Pareto
+    efficiency — every connection is pinned by at least one group that is
+    saturated (no share can be raised without lowering another)."""
+    conns, caps, members = _build(conn_ids, extra_groups)
+    share = waterfill(conns, caps, members)
+    for key, ms in members.items():
+        total = sum(share[c] for c in ms)
+        assert total <= caps[key] + 1e-9
+    assert all(s > 0 for s in share.values())
+    saturated = {key for key, ms in members.items()
+                 if sum(share[c] for c in ms) >= caps[key] - 1e-6}
+    for c in conns:
+        assert any(c in members[key] for key in saturated), \
+            f"conn {c} not limited by any saturated group"
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.sets(_conn_st, min_size=1, max_size=8), _groups_st,
+       st.lists(st.floats(0.2, 5.0), min_size=8, max_size=8))
+def test_waterfill_weighted_feasible(conn_ids, extra_groups, raw_weights):
+    """Weighted max-min keeps feasibility and saturation; within a single
+    shared bottleneck, shares are proportional to weights."""
+    conns, caps, members = _build(conn_ids, extra_groups)
+    weights = {c: raw_weights[c[0]] for c in conns}
+    share = waterfill(conns, caps, members, weights=weights)
+    for key, ms in members.items():
+        assert sum(share[c] for c in ms) <= caps[key] + 1e-9
+    assert all(s > 0 for s in share.values())
+    saturated = {key for key, ms in members.items()
+                 if sum(share[c] for c in ms) >= caps[key] - 1e-6}
+    for c in conns:
+        assert any(c in members[key] for key in saturated)
+
+
+def test_waterfill_weighted_proportional_single_group():
+    conns = [(0, "l"), (1, "l"), (2, "l")]
+    caps = {"g": 1.0}
+    members = {"g": conns}
+    weights = {conns[0]: 1.0, conns[1]: 2.0, conns[2]: 1.0}
+    share = waterfill(conns, caps, members, weights=weights)
+    assert share[conns[1]] == pytest.approx(2 * share[conns[0]])
+    assert sum(share.values()) == pytest.approx(1.0)
+
+
+def test_waterfill_uncovered_conn_rejected():
+    """A connection outside every group has no meaningful share — loud
+    error instead of a silently unbounded allocation."""
+    conns = [(0, "l"), (1, "l")]
+    with pytest.raises(ValueError, match="no capacity group"):
+        waterfill(conns, {"g": 1.0}, {"g": [conns[0]]})
+
+
+def test_waterfill_nested_group_binds_first():
+    """A rack-like outer group tighter than the per-link inner groups."""
+    conns = [(0, "downlink:0"), (1, "downlink:0"), (2, "downlink:1")]
+    caps = {"l0": 1.0, "l1": 1.0, "rack": 0.3}
+    members = {"l0": conns[:2], "l1": conns[2:], "rack": list(conns)}
+    share = waterfill(conns, caps, members)
+    assert sum(share.values()) == pytest.approx(0.3)
+    assert share[conns[0]] == pytest.approx(0.1)
+    assert share[conns[2]] == pytest.approx(0.1)
+
+
+class TestGroupedModel:
+    def test_defaults_to_two_level(self):
+        gm = GroupedBandwidthModel()
+        bm = BandwidthModel()
+        active = {"downlink:0": {0, 1}, "downlink:1": {0},
+                  "uplink:0": {1, 2}}
+        assert gm.shares(active) == bm.shares(active)
+
+    def test_extra_group_by_link_name(self):
+        gm = GroupedBandwidthModel(
+            extra_groups=[("fabric", 0.5,
+                           frozenset({"downlink:0", "downlink:1"}))])
+        s = gm.shares({"downlink:0": {0}, "downlink:1": {1}})
+        assert s[(0, "downlink:0")] == pytest.approx(0.25)
+        assert s[(1, "downlink:1")] == pytest.approx(0.25)
+
+    def test_hetero_link_capacity(self):
+        gm = GroupedBandwidthModel(link_caps={"downlink:0": 2.0})
+        s = gm.shares({"downlink:0": {0, 1}})
+        # two workers on a double-capacity link: NICs bind at 1.0 each
+        assert s[(0, "downlink:0")] == pytest.approx(1.0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.floats(1.0, 16.0),
+       st.dictionaries(
+           st.sampled_from(["downlink:0", "downlink:1", "downlink:2",
+                            "uplink:0", "uplink:1", "uplink:2"]),
+           st.sets(st.integers(0, 5), min_size=1, max_size=6),
+           min_size=1, max_size=6))
+def test_topology_model_feasible(oversub, active):
+    """The §5 invariants survive arbitrary racked topologies: every
+    compiled group (links, NICs, rack uplinks) stays within capacity and
+    every connection hits a saturated group."""
+    topo = Topology.racked(6, 3, racks=2, oversubscription=oversub)
+    model = topo.grouped_model()
+    active = {r: ws for r, ws in active.items()
+              if int(r.split(":")[1]) < topo.num_shards}
+    conns = [(w, r) for r, ws in active.items() for w in ws]
+    if not conns:
+        return
+    shares = model.shares(active)
+    caps, members = model.groups_for(conns)
+    for key, ms in members.items():
+        assert sum(shares[c] for c in ms) <= caps[key] + 1e-9
+    saturated = {key for key, ms in members.items()
+                 if sum(shares[c] for c in ms) >= caps[key] - 1e-6}
+    for c in conns:
+        assert any(c in members[key] for key in saturated)

@@ -14,6 +14,7 @@ from repro.core.bandwidth import BandwidthModel
 from repro.core.events import Op, StepTemplate, ps_resources
 from repro.core.simulator import SimConfig, Simulation
 from repro.core.simulator_ref import ReferenceSimulation
+from repro.core.topology import Topology
 
 BW = 1e8
 
@@ -117,6 +118,48 @@ def test_throughput_matches():
     new, ref = run_both(3, "http2", num_ps=1)
     assert new.throughput(32, 5) == pytest.approx(ref.throughput(32, 5),
                                                   rel=1e-6)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+@pytest.mark.parametrize("num_ps", [1, 2])
+def test_star_topology_golden_trace(seed, num_ps):
+    """Acceptance gate: the default ``Topology.star()`` path must
+    reproduce the frozen reference engine's traces exactly — same
+    resources, same bandwidth model (paper rules), same RNG draws."""
+    rng = random.Random(1234 + seed)
+    tpls = make_steps(rng, num_ps)
+    kw = dict(link_policy="http2", win=2.8e6, steps_per_worker=20,
+              warmup_steps=5, seed=seed, record_trace=True,
+              record_op_times=True, service_jitter=0.12,
+              stall_alpha=2e-9, stall_rtt=1e-3)
+    topo = Topology.star(3, num_ps, bandwidth=BW)
+    new = Simulation(SimConfig(topology=topo, **kw)).run(tpls, 3)
+    ref_kw = dict(kw, resources=ps_resources(BW, num_ps))
+    if num_ps > 1:
+        ref_kw["bandwidth_model"] = BandwidthModel()
+    ref = ReferenceSimulation(SimConfig(**ref_kw)).run(tpls, 3)
+    assert_equivalent(new, ref)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_star_grouped_model_golden_trace(seed):
+    """The topology-compiled water-filling model on a plain 2-PS star must
+    be bit-identical to the paper's §5 two-level model (the reference
+    engine keeps using the historical BandwidthModel)."""
+    rng = random.Random(1234 + seed)
+    tpls = make_steps(rng, num_ps=2)
+    topo = Topology.star(3, 2, bandwidth=BW)
+    kw = dict(link_policy="http2", win=2.8e6, steps_per_worker=20,
+              warmup_steps=5, seed=seed, record_trace=True,
+              record_op_times=True, service_jitter=0.12,
+              stall_alpha=2e-9, stall_rtt=1e-3)
+    new = Simulation(SimConfig(topology=topo,
+                               bandwidth_model=topo.grouped_model(),
+                               **kw)).run(tpls, 3)
+    ref = ReferenceSimulation(SimConfig(
+        resources=ps_resources(BW, 2), bandwidth_model=BandwidthModel(),
+        **kw)).run(tpls, 3)
+    assert_equivalent(new, ref)
 
 
 def test_meta_reports_events():

@@ -1,0 +1,87 @@
+"""Shared fluid-link kernel (virtual-service clocks), used by both the DES
+engine (equal-share specialization) and the cluster emulator (weighted)."""
+import math
+
+import pytest
+
+from repro.core.fluidlink import EqualShareLink, Flow, WeightedFluidLink
+
+
+class TestWeightedFluidLink:
+    def test_single_flow_full_rate(self):
+        link = WeightedFluidLink(100.0)
+        done = []
+        link.add_flow(0.0, Flow(fid=1, weight=1.0, remaining=200.0,
+                                on_complete=lambda: done.append(1)))
+        assert link.next_projection(0.0) == pytest.approx(2.0)
+
+    def test_weighted_sharing(self):
+        """Weights 1 and 3 on a 100 B/s link: rates 25 and 75."""
+        link = WeightedFluidLink(100.0)
+        link.add_flow(0.0, Flow(fid=1, weight=1.0, remaining=100.0))
+        link.add_flow(0.0, Flow(fid=2, weight=3.0, remaining=300.0))
+        # both complete simultaneously at t = 4 (same per-weight service)
+        assert link.next_projection(0.0) == pytest.approx(4.0)
+        flows = link.pop_due(4.0)
+        assert {f.fid for f in flows} == {1, 2}
+        assert link.total_w == 0.0
+
+    def test_rate_change_preserves_targets(self):
+        """A second flow joining mid-service only stretches real time; the
+        virtual target is untouched (the whole point of the clock)."""
+        link = WeightedFluidLink(100.0)
+        link.add_flow(0.0, Flow(fid=1, weight=1.0, remaining=100.0))
+        # after 0.5s, 50 bytes served; a peer joins, rate halves
+        link.add_flow(0.5, Flow(fid=2, weight=1.0, remaining=1000.0))
+        # remaining 50 bytes at 50 B/s -> completes at t = 1.5
+        assert link.next_projection(0.5) == pytest.approx(1.5)
+        done = link.pop_due(1.5)
+        assert [f.fid for f in done] == [1]
+
+    def test_remove_flow_lazy_heap(self):
+        link = WeightedFluidLink(100.0)
+        f1 = Flow(fid=1, weight=1.0, remaining=100.0)
+        link.add_flow(0.0, f1)
+        link.add_flow(0.0, Flow(fid=2, weight=1.0, remaining=math.inf))
+        link.remove_flow(0.0, 1)
+        # heap still holds the stale entry; projection must skip it
+        assert link.next_projection(0.0) is None   # only inf flow left
+        assert link.total_w == pytest.approx(1.0)
+
+    def test_background_flow_never_projects(self):
+        link = WeightedFluidLink(100.0)
+        link.add_flow(0.0, Flow(fid=1, weight=1.0, remaining=math.inf))
+        assert link.next_projection(0.0) is None
+
+    def test_epoch_bumps_on_membership_change(self):
+        link = WeightedFluidLink(100.0)
+        e0 = link.epoch
+        link.add_flow(0.0, Flow(fid=1, weight=1.0, remaining=10.0))
+        assert link.epoch == e0 + 1
+        link.remove_flow(0.0, 1)
+        assert link.epoch == e0 + 2
+
+    def test_pop_due_bumps_epoch_once(self):
+        link = WeightedFluidLink(100.0)
+        link.add_flow(0.0, Flow(fid=1, weight=1.0, remaining=50.0))
+        link.add_flow(0.0, Flow(fid=2, weight=1.0, remaining=50.0))
+        e = link.epoch
+        done = link.pop_due(1.0)
+        assert len(done) == 2
+        assert link.epoch == e + 1
+
+
+class TestEqualShareLink:
+    def test_clock_materialization(self):
+        link = EqualShareLink(100.0)
+        link.rate = 25.0
+        link.materialize(2.0)
+        assert link.V == pytest.approx(50.0)
+        # time never runs backwards
+        link.materialize(1.0)
+        assert link.V == pytest.approx(50.0)
+
+    def test_active_set_slot(self):
+        link = EqualShareLink(100.0)
+        link.active.add(3)
+        assert 3 in link.active

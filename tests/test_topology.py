@@ -1,0 +1,339 @@
+"""Topology & placement layer: validation, compilation, threading.
+
+Covers: input validation with clear errors (Topology, SimConfig), star
+compilation equivalence with the paper's resource factory and bandwidth
+rules, compute speed factors, and the qualitative effects the layer exists
+to capture — oversubscribed rack fabrics throttle scale-out, and a PS
+colocated with a worker moves the bottleneck onto the shared NIC.
+"""
+import math
+
+import pytest
+
+from repro.core.bandwidth import BandwidthModel, EqualShareModel
+from repro.core.events import Op, StepTemplate, ps_resources
+from repro.core.simulator import SimConfig, Simulation
+from repro.core.topology import (Node, Placement, Rack, Topology,
+                                 TopologyBandwidthModel)
+
+BW = 1e2  # bytes/s, easy arithmetic
+
+
+def comm_heavy_steps(n_layers=4, size=200.0, compute=0.05, num_ps=1):
+    """Uplink/downlink-dominated step (bandwidth-bound regime); layers
+    round-robin over ``num_ps`` shards."""
+    ops = []
+    for i in range(n_layers):
+        p = i % num_ps
+        dn = "downlink" if num_ps == 1 else f"downlink:{p}"
+        up = "uplink" if num_ps == 1 else f"uplink:{p}"
+        dl = len(ops)
+        ops.append(Op(f"d{i}", dn, size=size))
+        ops.append(Op(f"f{i}", "worker", duration=compute, deps=(dl,)))
+        ops.append(Op(f"u{i}", up, size=size, deps=(dl + 1,)))
+    return [StepTemplate(ops=ops)]
+
+
+def run_tput(topology, workers, steps=None, steps_per_worker=30,
+             policy="fifo", **cfg_kw):
+    cfg = SimConfig(topology=topology, link_policy=policy,
+                    steps_per_worker=steps_per_worker, warmup_steps=5,
+                    **cfg_kw)
+    tr = Simulation(cfg).run(steps or comm_heavy_steps(), workers,
+                             sample=False)
+    return tr.throughput(32, warmup_steps=5)
+
+
+class TestValidation:
+    def test_needs_workers(self):
+        with pytest.raises(ValueError, match="at least one worker"):
+            Topology(workers=(), ps_nodes=(Node("ps0"),))
+
+    def test_unplaced_ps(self):
+        with pytest.raises(ValueError, match="unplaced parameter servers"):
+            Topology(workers=(Node("w0"),))
+
+    def test_unknown_placement_node(self):
+        with pytest.raises(ValueError, match="unknown node 'nope'"):
+            Topology(workers=(Node("w0"),), ps_nodes=(Node("ps0"),),
+                     placement=Placement(("nope",)))
+
+    def test_unknown_rack(self):
+        with pytest.raises(ValueError, match="unknown rack"):
+            Topology(workers=(Node("w0", rack="r9"),),
+                     ps_nodes=(Node("ps0"),))
+
+    def test_duplicate_node_name(self):
+        with pytest.raises(ValueError, match="duplicate node name"):
+            Topology(workers=(Node("x"), Node("x")), ps_nodes=(Node("ps0"),))
+
+    def test_oversubscription_below_one(self):
+        with pytest.raises(ValueError, match="oversubscription must be >= 1"):
+            Rack("r0", oversubscription=0.5)
+
+    def test_bad_nic_and_speed(self):
+        with pytest.raises(ValueError, match="nic capacity must be > 0"):
+            Node("w0", nic=-1.0)
+        with pytest.raises(ValueError, match="speed must be > 0"):
+            Node("w0", speed=0.0)
+
+    def test_negative_bandwidth(self):
+        with pytest.raises(ValueError, match="bandwidth must be > 0"):
+            Topology.star(2, 1, bandwidth=-5.0)
+
+    def test_resources_need_bandwidth(self):
+        with pytest.raises(ValueError, match="no nominal bandwidth"):
+            Topology.star(2, 1).resources()
+
+    def test_empty_placement(self):
+        with pytest.raises(ValueError, match="at least one PS shard"):
+            Placement(())
+
+
+class TestSimConfigValidation:
+    def test_needs_resources_or_topology(self):
+        with pytest.raises(ValueError, match="resources= or topology="):
+            SimConfig()
+
+    def test_zero_win(self):
+        with pytest.raises(ValueError, match="window must be > 0"):
+            SimConfig(resources=ps_resources(BW), win=0.0)
+
+    def test_bad_policy(self):
+        with pytest.raises(ValueError, match="unknown link_policy"):
+            SimConfig(resources=ps_resources(BW), link_policy="tcp")
+
+    def test_bad_steps(self):
+        with pytest.raises(ValueError, match="steps_per_worker"):
+            SimConfig(resources=ps_resources(BW), steps_per_worker=0)
+
+    def test_negative_jitter(self):
+        with pytest.raises(ValueError, match="service_jitter"):
+            SimConfig(resources=ps_resources(BW), service_jitter=-0.1)
+
+    def test_too_many_workers_for_topology(self):
+        cfg = SimConfig(topology=Topology.star(2, 1, bandwidth=BW))
+        with pytest.raises(ValueError, match="only 2 worker nodes"):
+            Simulation(cfg).run(comm_heavy_steps(), 3, sample=False)
+
+    def test_link_bandwidth_still_validated(self):
+        with pytest.raises(ValueError, match="bandwidth > 0"):
+            ps_resources(0.0)
+
+    def test_resources_topology_shard_mismatch(self):
+        """Explicit resources that don't name the topology's links would
+        make every compiled capacity group silently match nothing."""
+        with pytest.raises(ValueError, match="missing link 'downlink:0'"):
+            SimConfig(resources=ps_resources(BW, 1),
+                      topology=Topology.racked(4, 2, oversubscription=8.0,
+                                               bandwidth=BW))
+
+
+class TestStarCompilation:
+    def test_resources_match_ps_resources(self):
+        for m in (1, 2, 3):
+            t = Topology.star(4, m, bandwidth=BW)
+            assert t.resources() == ps_resources(BW, m)
+            assert list(t.resources()) == list(ps_resources(BW, m))
+
+    def test_bandwidth_model_defaults(self):
+        assert type(Topology.star(4, 1).bandwidth_model()) is EqualShareModel
+        assert type(Topology.star(4, 2).bandwidth_model()) is BandwidthModel
+        t = Topology.racked(4, 2, oversubscription=2.0)
+        assert isinstance(t.bandwidth_model(), TopologyBandwidthModel)
+
+    def test_grouped_model_reduces_to_paper_rules(self):
+        gm = Topology.star(6, 2).grouped_model()
+        bm = BandwidthModel()
+        cases = [
+            {"downlink:0": {0, 1, 2}},
+            {"downlink:0": {0}, "downlink:1": {0, 1, 2, 3}},
+            {"downlink:0": {0, 1}, "uplink:0": {1, 2}, "uplink:1": {0}},
+        ]
+        for active in cases:
+            assert gm.shares(active) == bm.shares(active)
+
+    def test_star_sim_equals_default_sim(self):
+        """Topology.star() threading end-to-end: identical trace to the
+        plain resources= path (same engine path, same RNG draws)."""
+        tpls = comm_heavy_steps()
+        kw = dict(link_policy="http2", win=150.0, steps_per_worker=20,
+                  warmup_steps=5, seed=3, service_jitter=0.1,
+                  record_trace=True)
+        a = Simulation(SimConfig(resources=ps_resources(BW), **kw)).run(
+            tpls, 3)
+        b = Simulation(SimConfig(topology=Topology.star(3, 1, bandwidth=BW),
+                                 **kw)).run(tpls, 3)
+        assert a.step_completions == b.step_completions
+        assert [(r.worker, r.name, r.end) for r in a.records] == \
+               [(r.worker, r.name, r.end) for r in b.records]
+
+
+class TestSpeedFactors:
+    def test_slow_worker_scales_compute(self):
+        ops = [Op("d", "downlink", size=200),
+               Op("f", "worker", duration=1.0, deps=(0,)),
+               Op("u", "uplink", size=100, deps=(1,))]
+        fast = Topology(workers=(Node("w0"),), ps_nodes=(Node("ps0"),),
+                        bandwidth=BW)
+        slow = Topology(workers=(Node("w0", speed=0.5),),
+                        ps_nodes=(Node("ps0"),), bandwidth=BW)
+        t_fast = run_tput(fast, 1, steps=[StepTemplate(ops=list(ops))],
+                          steps_per_worker=1)
+        t_slow = run_tput(slow, 1, steps=[StepTemplate(ops=list(ops))],
+                          steps_per_worker=1)
+        # serial chain 2 + 1 + 1 = 4s vs 2 + 2 + 1 = 5s
+        assert t_fast == pytest.approx(t_slow * 5.0 / 4.0)
+
+    def test_slow_ps_scales_update(self):
+        ops = [Op("u", "uplink", size=100),
+               Op("upd", "ps", duration=1.0, deps=(0,))]
+        base = Topology(workers=(Node("w0"),), ps_nodes=(Node("ps0"),),
+                        bandwidth=BW)
+        slow = Topology(workers=(Node("w0"),),
+                        ps_nodes=(Node("ps0", speed=0.25),), bandwidth=BW)
+        cfg_b = SimConfig(topology=base, link_policy="fifo",
+                          steps_per_worker=1, warmup_steps=0,
+                          record_op_times=True)
+        cfg_s = SimConfig(topology=slow, link_policy="fifo",
+                          steps_per_worker=1, warmup_steps=0,
+                          record_op_times=True)
+        tb = Simulation(cfg_b).run([StepTemplate(ops=list(ops))], 1,
+                                   sample=False)
+        ts = Simulation(cfg_s).run([StepTemplate(ops=list(ops))], 1,
+                                   sample=False)
+        assert tb.step_completions[0][2] == pytest.approx(2.0)
+        assert ts.step_completions[0][2] == pytest.approx(5.0)  # 1 + 4
+
+
+class TestQualitativeEffects:
+    """The two headline behaviors the ISSUE's benchmark must show."""
+
+    def _ps_rack(self, num_workers, ratio):
+        """Both PS shards isolated in rack r0; workers in rack r1.  All
+        PS traffic crosses r0's (oversubscribed) uplink."""
+        return Topology(
+            workers=tuple(Node(f"w{i}", rack="r1")
+                          for i in range(num_workers)),
+            ps_nodes=(Node("ps0", rack="r0"), Node("ps1", rack="r0")),
+            racks=(Rack("r0", oversubscription=ratio), Rack("r1")),
+            bandwidth=BW)
+
+    def test_oversubscription_throttles(self):
+        steps = comm_heavy_steps(num_ps=2)
+        flat = run_tput(self._ps_rack(4, 1.0), 4, steps=steps)
+        tight = run_tput(self._ps_rack(4, 8.0), 4, steps=steps)
+        assert tight < 0.9 * flat
+
+    def test_oversubscription_monotone(self):
+        steps = comm_heavy_steps(num_ps=2)
+        prev = math.inf
+        for ratio in (1.0, 4.0, 16.0):
+            cur = run_tput(self._ps_rack(4, ratio), 4, steps=steps)
+            assert cur <= prev + 1e-9
+            prev = cur
+
+    def test_colocated_ps_shares_host_nic(self):
+        dedicated = Topology(
+            workers=tuple(Node(f"w{i}") for i in range(4)),
+            ps_nodes=(Node("ps0"),), bandwidth=BW)
+        colocated = Topology(
+            workers=tuple(Node(f"w{i}") for i in range(4)),
+            placement=Placement(("w0",)), bandwidth=BW)
+        t_ded = run_tput(dedicated, 4)
+        t_col = run_tput(colocated, 4)
+        # host NIC now carries the PS's fan-in/out AND w0's own transfers
+        assert t_col < t_ded
+
+    def test_hetero_ps_nic_helps(self):
+        slow_ps = Topology(
+            workers=tuple(Node(f"w{i}") for i in range(6)),
+            ps_nodes=(Node("ps0", nic=1.0),), bandwidth=BW)
+        fast_ps = Topology(
+            workers=tuple(Node(f"w{i}") for i in range(6)),
+            ps_nodes=(Node("ps0", nic=3.0),), bandwidth=BW)
+        assert run_tput(fast_ps, 6) > 1.2 * run_tput(slow_ps, 6)
+
+
+class TestEmulatorFabric:
+    def test_star_topology_close_to_classic(self):
+        from repro.core.paper_models import PAPER_DNNS, PLATFORMS
+        from repro.emulator.cluster import measure_throughput
+        dnn, plat = PAPER_DNNS["googlenet"], PLATFORMS["private_cpu"]
+        classic = measure_throughput(dnn, 16, plat, num_workers=3,
+                                     num_ps=2, steps=30, seed=0)
+        fabric = measure_throughput(dnn, 16, plat, num_workers=3, steps=30,
+                                    seed=0, topology=Topology.star(3, 2))
+        # same fluid semantics; fabric adds NIC coupling the independent
+        # per-link clocks ignore, so allow a small gap
+        assert fabric == pytest.approx(classic, rel=0.1)
+
+    def test_emulator_oversubscription_throttles(self):
+        from repro.core.paper_models import PAPER_DNNS, PLATFORMS
+        from repro.emulator.cluster import measure_throughput
+        dnn, plat = PAPER_DNNS["alexnet"], PLATFORMS["private_cpu"]
+
+        def topo(ratio):
+            return Topology(
+                workers=tuple(Node(f"w{i}", rack="r1") for i in range(4)),
+                ps_nodes=(Node("ps0", rack="r0"),),
+                racks=(Rack("r0", oversubscription=ratio), Rack("r1")))
+        flat = measure_throughput(dnn, 8, plat, num_workers=4, steps=30,
+                                  seed=0, topology=topo(1.0))
+        tight = measure_throughput(dnn, 8, plat, num_workers=4, steps=30,
+                                   seed=0, topology=topo(8.0))
+        assert tight < flat
+
+    def test_emulator_rejects_excess_workers(self):
+        from repro.core.paper_models import PAPER_DNNS, PLATFORMS
+        from repro.emulator.cluster import ClusterEmulator
+        with pytest.raises(ValueError, match="only 2 worker nodes"):
+            ClusterEmulator(PAPER_DNNS["googlenet"], 16,
+                            PLATFORMS["private_cpu"], num_workers=3,
+                            topology=Topology.star(2, 1))
+
+    def test_emulator_rejects_num_ps_conflict(self):
+        """Same contract as PredictionRun: an explicit num_ps that
+        disagrees with the topology is an error, not a silent override."""
+        from repro.core.paper_models import PAPER_DNNS, PLATFORMS
+        from repro.emulator.cluster import ClusterEmulator
+        with pytest.raises(ValueError, match="conflicts with topology"):
+            ClusterEmulator(PAPER_DNNS["googlenet"], 16,
+                            PLATFORMS["private_cpu"], num_workers=2,
+                            num_ps=4, topology=Topology.star(4, 2))
+
+
+class TestPredictionRunThreading:
+    def test_num_ps_follows_topology(self):
+        from repro.core.predictor import PredictionRun
+        r = PredictionRun(dnn="googlenet", batch_size=16,
+                          platform="private_cpu",
+                          topology=Topology.star(4, 2))
+        assert r.num_ps == 2
+
+    def test_num_ps_conflict_rejected(self):
+        from repro.core.predictor import PredictionRun
+        with pytest.raises(ValueError, match="conflicts with topology"):
+            PredictionRun(dnn="googlenet", batch_size=16,
+                          platform="private_cpu", num_ps=3,
+                          topology=Topology.star(4, 2))
+
+    def test_with_topology_shard_mismatch_rejected(self):
+        """A prepared run's profile is bound to its per-shard links;
+        attaching a topology with a different shard count must fail loudly
+        instead of KeyError-ing deep inside the simulator."""
+        from repro.core.predictor import PredictionRun
+        r = PredictionRun(dnn="googlenet", batch_size=16,
+                          platform="private_cpu", num_ps=1)
+        with pytest.raises(ValueError, match="matching num_ps"):
+            r.with_topology(Topology.star(4, 2))
+
+    def test_topology_bandwidth_beats_platform_default(self):
+        """Explicit Topology.bandwidth must drive the compiled resources
+        (same precedence as the emulator) so predictions and ground truth
+        describe the same cluster."""
+        t = Topology.star(2, 1, bandwidth=5e6)
+        res = t.resources(default_bandwidth=1e9)
+        assert res["downlink"].bandwidth == 5e6
+        res2 = Topology.star(2, 1).resources(default_bandwidth=1e9)
+        assert res2["downlink"].bandwidth == 1e9
