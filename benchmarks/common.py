@@ -4,7 +4,6 @@ from __future__ import annotations
 import json
 import os
 import time
-from typing import Dict, List, Sequence
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 

@@ -1,0 +1,156 @@
+"""Placement search over topology families: the §6 scheduler loop, closed.
+
+For each family — M PS shards whose default (paper-style dedicated) hosts
+sit behind an oversubscribed rack uplink, with fat-NIC spare nodes in the
+flat rack and worker 0 as a colocation candidate — run all three search
+strategies of ``repro.core.placement_search`` against the profiled
+predictor and record the chosen placement, its predicted throughput, and
+the speedup over the topology's default placement.
+
+Families sweep oversubscription x spare-node NIC x 1..4 PS shards.  The
+qualitative gates (the reason this figure exists, and what CI asserts):
+
+  * **never worse**: every strategy's placement predicts at least the
+    default placement's throughput (the optimizer may not hurt);
+  * **oracle**: greedy lands within 1% of the exhaustive optimum on
+    every family small enough to enumerate (all <= 4-shard families);
+  * **anneal >= greedy**: annealing refines the greedy solution, so it
+    can only match or improve it;
+  * **finds gain**: on structured clusters (oversubscribed default rack
+    or fat spare NICs) the optimizer discovers a strictly better
+    placement.
+
+Writes ``benchmarks/results/fig_placement.json``:
+
+    PYTHONPATH=src python -m benchmarks.fig_placement [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.core.placement_search import (evaluator_from_run,
+                                         search_placement)
+from repro.core.predictor import PredictionRun
+from repro.core.topology import Node, Rack, Topology
+
+from .common import row, save_json
+
+DNN = "alexnet"
+BATCH = 8
+PLATFORM = "private_cpu"
+
+# (oversubscription of the default rack, NIC factor of the spare nodes)
+FAMILIES = ((1.0, 1.0), (4.0, 1.0), (1.0, 2.0), (4.0, 2.0))
+FAMILIES_FAST = ((1.0, 1.0), (4.0, 2.0))
+STRATEGIES = ("exhaustive", "greedy", "anneal")
+
+
+def pool_topology(num_workers: int, num_shards: int, oversub: float,
+                  spare_nic: float) -> Topology:
+    """Default hosts ``bad0..`` in (oversubscribed) rack r0, spare nodes
+    ``good0..`` with ``spare_nic``-capacity ports in flat rack r1 beside
+    the workers.  Default placement = the paper's convention (shard p on
+    its own dedicated node) — in the bad rack."""
+    bad = tuple(Node(f"bad{p}", rack="r0") for p in range(num_shards))
+    good = tuple(Node(f"good{p}", nic=spare_nic, rack="r1")
+                 for p in range(num_shards))
+    return Topology(
+        workers=tuple(Node(f"w{i}", rack="r1") for i in range(num_workers)),
+        ps_nodes=bad + good,
+        racks=(Rack("r0", oversubscription=oversub), Rack("r1")),
+    ).with_placement(tuple(n.name for n in bad))
+
+
+def candidate_hosts(topo: Topology, num_shards: int, cap: int) -> tuple:
+    """Bad/good nodes interleaved, then worker 0 (colocation candidate),
+    trimmed so the exhaustive space ``|hosts|^M`` stays within ``cap`` —
+    the same host list feeds all three strategies, so the oracle
+    comparison is apples-to-apples."""
+    pool = []
+    for p in range(num_shards):
+        pool += [f"bad{p}", f"good{p}"]
+    pool.append("w0")
+    while len(pool) > 1 and len(pool) ** num_shards > cap:
+        pool.pop()
+    return tuple(pool)
+
+
+def run(fast: bool = False, num_workers=6, shard_counts=(1, 2, 3, 4),
+        profile_steps=40, sim_steps=250, n_runs=3,
+        exhaustive_cap=256) -> dict:
+    if fast:
+        num_workers, shard_counts = 4, (1, 2)
+        profile_steps, sim_steps, n_runs = 20, 120, 2
+        exhaustive_cap = 64
+    families = FAMILIES_FAST if fast else FAMILIES
+    out = {"figure": "fig_placement", "dnn": DNN, "batch": BATCH,
+           "platform": PLATFORM, "num_workers": num_workers,
+           "families": [], "checks": {}}
+
+    print("family,M,oversub,spare_nic,strategy,placement,ex_s,speedup,"
+          "evaluated")
+    results = []
+    for M in shard_counts:
+        base = PredictionRun(dnn=DNN, batch_size=BATCH, platform=PLATFORM,
+                             num_ps=M, profile_steps=profile_steps,
+                             sim_steps=sim_steps).prepare()
+        for oversub, spare_nic in families:
+            topo = pool_topology(num_workers, M, oversub, spare_nic)
+            hosts = candidate_hosts(topo, M, exhaustive_cap)
+            fam = {"M": M, "oversub": oversub, "spare_nic": spare_nic,
+                   "hosts": list(hosts), "structured": oversub > 1.0
+                   or spare_nic > 1.0, "strategies": {}}
+            with evaluator_from_run(base, topo, num_workers,
+                                    n_runs=n_runs) as ev:
+                for strategy in STRATEGIES:
+                    res = search_placement(ev, strategy, hosts=hosts,
+                                           max_exhaustive=exhaustive_cap)
+                    fam["strategies"][strategy] = {
+                        "placement": list(res.placement),
+                        "throughput": res.throughput,
+                        "baseline": res.baseline_throughput,
+                        "speedup": res.speedup,
+                        "evaluated": res.evaluated,
+                        "rounds": res.rounds,
+                    }
+                    print(row(f"ov{oversub}xnic{spare_nic}", M, oversub,
+                              spare_nic, strategy, "/".join(res.placement),
+                              f"{res.throughput:.2f}", f"{res.speedup:.3f}",
+                              res.evaluated), flush=True)
+            results.append(fam)
+    out["families"] = results
+
+    # -- qualitative gates --------------------------------------------------
+    def strat(fam, s):
+        return fam["strategies"][s]
+
+    out["checks"]["never_worse"] = all(
+        strat(f, s)["throughput"] >= strat(f, s)["baseline"] * (1 - 1e-9)
+        for f in results for s in STRATEGIES)
+    out["checks"]["greedy_matches_exhaustive"] = all(
+        strat(f, "greedy")["throughput"]
+        >= 0.99 * strat(f, "exhaustive")["throughput"] for f in results)
+    out["checks"]["anneal_at_least_greedy"] = all(
+        strat(f, "anneal")["throughput"]
+        >= strat(f, "greedy")["throughput"] * (1 - 1e-9) for f in results)
+    structured = [f for f in results if f["structured"]]
+    out["checks"]["optimizer_finds_gain"] = any(
+        strat(f, "greedy")["speedup"] > 1.02 for f in structured)
+
+    save_json("fig_placement", out)
+    print(f"# checks: {out['checks']}")
+    if not all(out["checks"].values()):
+        raise AssertionError(
+            f"qualitative placement-search checks failed: {out['checks']}")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="CI-sized run")
+    args = ap.parse_args()
+    run(fast=args.fast)
+
+
+if __name__ == "__main__":
+    main()

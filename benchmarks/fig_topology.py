@@ -118,7 +118,8 @@ def run(fast: bool = False, workers=(1, 2, 4, 6, 8), profile_steps=30,
     out["scenarios"]["nic"] = nic
 
     # -- qualitative gates (the reason this figure exists) ------------------
-    at_wmax = lambda d: d["predicted"][-1]
+    def at_wmax(d):
+        return d["predicted"][-1]
     ratios = [at_wmax(oversub[str(x)]) for x in OVERSUB_RATIOS]
     out["checks"]["oversub_throttles"] = ratios[-1] < ratios[0]
     out["checks"]["oversub_monotone"] = all(

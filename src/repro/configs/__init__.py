@@ -6,7 +6,7 @@ Usage: ``get_config("gemma-7b")``, ``get_config("gemma-7b", smoke=True)``,
 from __future__ import annotations
 
 import importlib
-from typing import Dict, List, Optional
+from typing import List
 
 from repro.models.config import ModelConfig
 

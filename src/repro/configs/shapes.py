@@ -14,7 +14,7 @@ allocation) for everything the lowered step consumes besides params.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,6 +8,9 @@ from .events import (COMPUTE, LINK, Op, ResourceSpec, StepTemplate, Trace,
 from .overhead import (OverheadModel, RecordedOp, RecordedStep,
                        preprocess_profile, preprocess_recorded_step)
 from .paper_models import PAPER_DNNS, PLATFORMS
+from .placement_search import (PlacementEvaluator, SearchResult,
+                               evaluator_from_run, evaluator_from_templates,
+                               search_placement)
 from .predictor import PredictionRun, calibrate_overhead, prediction_error
 from .simulator import SimConfig, Simulation, predict_throughput
 from .topology import (Node, Placement, Rack, Topology,
@@ -26,5 +29,7 @@ __all__ = [
     "calibrate_overhead", "prediction_error", "SimConfig",
     "Simulation", "predict_throughput",
     "Node", "Placement", "Rack", "Topology", "TopologyBandwidthModel",
+    "PlacementEvaluator", "SearchResult", "evaluator_from_run",
+    "evaluator_from_templates", "search_placement",
     "measure_many", "parallel_map", "predict_many", "sweep_parallel",
 ]

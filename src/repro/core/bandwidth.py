@@ -26,7 +26,7 @@ capacity of 1.0 means "one nominal NIC" and 2.0 models a double-speed port.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Mapping, Optional, Sequence, Set, Tuple
+from typing import Dict, Mapping, Optional, Sequence, Set, Tuple
 
 # A connection is (worker, link_resource_name); shares are fractions of the
 # nominal link bandwidth B.

@@ -20,7 +20,7 @@ but reduce it to phase durations (no op-level dependencies, no overlap):
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Sequence
+from typing import Sequence
 
 from .overhead import RecordedStep
 

@@ -13,10 +13,9 @@ Roofline terms (per device), TPU v5e constants:
 """
 from __future__ import annotations
 
-import math
 import re
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 # TPU v5e hardware constants (per chip)
 PEAK_FLOPS = 197e12          # bf16 FLOP/s

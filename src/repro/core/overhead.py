@@ -14,11 +14,11 @@ demand is ``size`` bytes (duration set by the simulated bandwidth share).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
-from .events import COMPUTE, LINK, Op, ResourceSpec, StepTemplate
+from .events import Op, StepTemplate
 
 
 @dataclass(frozen=True)

@@ -13,8 +13,6 @@ from __future__ import annotations
 from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Sequence
 
-import numpy as np
-
 from repro.core import baselines as bl
 from repro.core.bandwidth import BandwidthModel, EqualShareModel
 from repro.core.events import StepTemplate, ps_resources

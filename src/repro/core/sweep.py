@@ -41,7 +41,7 @@ from repro.core.simulator import SimConfig, Simulation
 
 __all__ = [
     "parallel_map", "predict_many", "measure_many", "sweep_parallel",
-    "simulate_task", "default_pool_size",
+    "simulate_task", "simulate_all", "SimulationPool", "default_pool_size",
 ]
 
 
@@ -174,6 +174,78 @@ def _group_means(outs: Sequence[float], workers: Sequence[int],
 # ------------------------------------------------------------------- facades
 
 
+def simulate_all(tasks: Sequence[SimTask],
+                 templates: Optional[list] = None,
+                 parallel: bool = True,
+                 max_workers: Optional[int] = None) -> List[float]:
+    """Run pre-seeded :func:`simulate_task` payloads through the pool,
+    order-preserving.  With ``templates``, every task's template slot is
+    replaced by the shared list, shipped once per pool worker via the
+    executor initializer instead of being re-pickled inside each task
+    (candidate batches in ``repro.core.placement_search`` and the
+    ``predict_many`` fan both reuse one template list across dozens of
+    tasks)."""
+    if templates is None:
+        return parallel_map(simulate_task, tasks, max_workers=max_workers,
+                            parallel=parallel)
+    stripped = [_strip_templates(t) for t in tasks]
+    return parallel_map(simulate_task, stripped, max_workers=max_workers,
+                        parallel=parallel,
+                        initializer=_set_worker_templates,
+                        initargs=(templates,))
+
+
+class SimulationPool:
+    """Reusable executor for :func:`simulate_task` payloads sharing one
+    template list.
+
+    :func:`simulate_all` builds and tears down a pool per call — right
+    for one-shot figure fans, wasteful for iterative searches
+    (``repro.core.placement_search`` annealing scores one candidate per
+    step; a fresh pool per step pays executor startup every iteration).
+    The executor is created lazily on first parallel use, ships
+    ``templates`` once via the initializer, and keeps the serial-fallback
+    semantics of :func:`parallel_map` (including ``REPRO_SWEEP_SERIAL``)
+    — results are bit-identical either way.
+    """
+
+    def __init__(self, templates: Optional[list] = None,
+                 parallel: bool = True,
+                 max_workers: Optional[int] = None):
+        self.templates = templates
+        self.parallel = parallel
+        self.max_workers = max_workers or default_pool_size()
+        self._executor: Optional[ProcessPoolExecutor] = None
+
+    def map(self, tasks: Sequence[SimTask]) -> List[float]:
+        tasks = list(tasks)
+        if self.templates is not None:
+            tasks = [_strip_templates(t) for t in tasks]
+        if (not self.parallel or self.max_workers <= 1 or len(tasks) <= 1
+                or _serial_forced()):
+            if self.templates is not None:
+                _set_worker_templates(self.templates)
+            return [simulate_task(t) for t in tasks]
+        if self._executor is None:
+            init = None if self.templates is None else _set_worker_templates
+            initargs = () if self.templates is None else (self.templates,)
+            self._executor = ProcessPoolExecutor(
+                max_workers=self.max_workers, mp_context=_pool_context(),
+                initializer=init, initargs=initargs)
+        return list(self._executor.map(simulate_task, tasks))
+
+    def close(self) -> None:
+        if self._executor is not None:
+            self._executor.shutdown()
+            self._executor = None
+
+    def __enter__(self) -> "SimulationPool":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
 def predict_many(run, workers: Sequence[int], n_runs: int = 3,
                  parallel: bool = True,
                  max_workers: Optional[int] = None) -> Dict[int, float]:
@@ -184,12 +256,9 @@ def predict_many(run, workers: Sequence[int], n_runs: int = 3,
         run.prepare()
     tasks: List[SimTask] = []
     for w in workers:
-        tasks.extend(_strip_templates(t)
-                     for t in run.prediction_tasks(w, n_runs))
-    outs = parallel_map(simulate_task, tasks, max_workers=max_workers,
-                        parallel=parallel,
-                        initializer=_set_worker_templates,
-                        initargs=(run.sim_steps_templates,))
+        tasks.extend(run.prediction_tasks(w, n_runs))
+    outs = simulate_all(tasks, templates=run.sim_steps_templates,
+                        parallel=parallel, max_workers=max_workers)
     return _group_means(outs, workers, n_runs)
 
 

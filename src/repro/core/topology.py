@@ -41,7 +41,7 @@ fabrics are full-duplex with one capacity per direction.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Dict, List, Mapping, Optional, Sequence, Set, Tuple
 
 from .bandwidth import (BandwidthModel, Conn, EqualShareModel, _direction_of,
@@ -168,6 +168,11 @@ class Topology:
     def num_shards(self) -> int:
         return len(self._shard_hosts())
 
+    def shard_hosts(self) -> Tuple[str, ...]:
+        """Host node name of every PS shard, in shard order (the explicit
+        placement, or ``ps_nodes`` order when none was given)."""
+        return self._shard_hosts()
+
     def node(self, name: str) -> Node:
         for n in self.workers + self.ps_nodes:
             if n.name == name:
@@ -229,6 +234,23 @@ class Topology:
         return Topology(workers=self.workers, ps_nodes=self.ps_nodes,
                         racks=self.racks,
                         placement=Placement(tuple(shard_hosts)),
+                        bandwidth=self.bandwidth)
+
+    def with_node_speed(self, name: str, speed: float) -> "Topology":
+        """Clone with node ``name``'s compute speed replaced — the
+        straggler what-if: ``speed=0.5`` makes every compute op on that
+        node take twice as long (both engines honor it)."""
+        if speed <= 0:
+            raise ValueError(
+                f"node {name!r}: compute speed must be > 0, got {speed}")
+        self.node(name)   # KeyError on unknown nodes, before any cloning
+
+        def patch(nodes: Tuple[Node, ...]) -> Tuple[Node, ...]:
+            return tuple(replace(n, speed=speed) if n.name == name else n
+                         for n in nodes)
+        return Topology(workers=patch(self.workers),
+                        ps_nodes=patch(self.ps_nodes),
+                        racks=self.racks, placement=self.placement,
                         bandwidth=self.bandwidth)
 
     # ---------------------------------------------------------- compilation
@@ -349,7 +371,7 @@ class TopologyBandwidthModel(BandwidthModel):
             rworkers = frozenset(worker_idx[n.name] for n in member_nodes
                                  if n.name in worker_idx)
             rlinks = frozenset(
-                l for p in range(M) for l in (dl[p], ul[p])
+                ln for p in range(M) for ln in (dl[p], ul[p])
                 if topology.shard_host(p).rack == rack.name)
             self.rack_groups.append((rack.name, cap, rworkers, rlinks))
 

@@ -25,9 +25,8 @@ summed compute matches ``cost_analysis()`` FLOPs of the real compiled step
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 from repro.core.events import Op, ResourceSpec, StepTemplate, LINK, COMPUTE
 from repro.core.simulator import SimConfig, Simulation

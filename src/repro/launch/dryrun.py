@@ -21,7 +21,6 @@ import traceback         # noqa: E402
 from typing import Dict, Optional  # noqa: E402
 
 import jax               # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 
 from repro.configs import (ARCH_IDS, SHAPES, get_config,  # noqa: E402
                            get_optimizer_name, input_specs, shape_applicable)

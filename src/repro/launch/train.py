@@ -22,13 +22,8 @@ Fault tolerance:
 from __future__ import annotations
 
 import argparse
-import os
 import time
-from typing import Optional
-
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro import checkpoint as ckpt
 from repro.configs import ARCH_IDS, get_config, get_optimizer_name

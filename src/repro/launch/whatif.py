@@ -25,6 +25,15 @@ fabrics, heterogeneous PS NICs, PS colocated with worker 0:
     PYTHONPATH=src python -m repro.launch.whatif --ps-cluster \
         --dnn alexnet --batch 8 --workers 1 2 4 8 \
         --num-ps 2 --oversub 4 --ps-nic 2.0 --colocate-ps
+
+Two further PS-cluster what-ifs close the paper's §6 scheduler loop:
+
+  * ``--straggler-worker 1.5`` slows worker 0's compute by the factor
+    (via ``Node.speed``) and adds a predicted-degradation column;
+  * ``--optimize-placement [greedy|exhaustive|anneal]`` searches
+    shard->node mappings of the topology (``repro.core.placement_search``)
+    and reports the chosen placement and its predicted speedup over the
+    topology's default placement.
 """
 from __future__ import annotations
 
@@ -108,13 +117,45 @@ def ps_cluster_main(args) -> None:
     pred_star = predict_many(
         base.with_topology(Topology.star(wmax, args.num_ps)), args.workers)
     pred_topo = predict_many(base.with_topology(topo), args.workers)
+    pred_strag = None
+    if args.straggler_worker != 1.0:
+        strag = topo.with_node_speed("w0", 1.0 / args.straggler_worker)
+        pred_strag = predict_many(base.with_topology(strag), args.workers)
     print(f"# {args.dnn} bs={args.batch} on {args.cluster_platform}: "
           f"M={args.num_ps} oversub={args.oversub} ps_nic={args.ps_nic} "
           f"colocate={args.colocate_ps}")
-    print(f"{'W':>3s} {'star_ex/s':>10s} {'topo_ex/s':>10s} {'ratio':>6s}")
+    head = f"{'W':>3s} {'star_ex/s':>10s} {'topo_ex/s':>10s} {'ratio':>6s}"
+    if pred_strag is not None:
+        head += f" {'strag_ex/s':>10s} {'degrade':>7s}"
+    print(head)
     for w in args.workers:
         s, t = pred_star[w], pred_topo[w]
-        print(f"{w:3d} {s:10.2f} {t:10.2f} {t / s if s else 0:6.2f}")
+        line = f"{w:3d} {s:10.2f} {t:10.2f} {t / s if s else 0:6.2f}"
+        if pred_strag is not None:
+            g = pred_strag[w]
+            line += f" {g:10.2f} {g / t if t else 0:7.2f}"
+        print(line)
+    if args.optimize_placement:
+        optimize_placement_report(base, topo, wmax,
+                                  strategy=args.optimize_placement)
+
+
+def optimize_placement_report(base, topo, num_workers: int,
+                              strategy: str = "greedy"):
+    """Search shard->node mappings of ``topo`` at ``num_workers`` workers
+    and print (and return) the chosen placement vs the topology's
+    default."""
+    from repro.core.placement_search import (evaluator_from_run,
+                                             search_placement)
+    with evaluator_from_run(base, topo, num_workers) as ev:
+        res = search_placement(ev, strategy)
+    print(f"# placement search ({strategy}, W={num_workers}): "
+          f"{res.evaluated} candidate placements evaluated")
+    print(f"#   default   {'/'.join(res.baseline_placement)}: "
+          f"{res.baseline_throughput:.2f} ex/s")
+    print(f"#   optimized {'/'.join(res.placement)}: "
+          f"{res.throughput:.2f} ex/s ({res.speedup:.2f}x)")
+    return res
 
 
 def main() -> None:
@@ -145,9 +186,28 @@ def main() -> None:
                     help="PS NIC capacity in multiples of the nominal")
     ap.add_argument("--colocate-ps", action="store_true",
                     help="place PS shard 0 on worker 0's node")
+    ap.add_argument("--straggler-worker", type=float, default=1.0,
+                    help="slow worker 0's compute by this factor "
+                         "(1.5 = 50%% slower; PS-cluster mode)")
+    ap.add_argument("--optimize-placement", nargs="?", const="greedy",
+                    default=None,
+                    choices=["greedy", "exhaustive", "anneal"],
+                    help="search PS shard placements of the topology and "
+                         "report the best one (default strategy: greedy)")
     ap.add_argument("--profile-steps", type=int, default=30)
     ap.add_argument("--sim-steps", type=int, default=250)
     args = ap.parse_args()
+    if args.straggler_worker < 1.0:
+        ap.error(f"--straggler-worker is a slowdown factor and must be "
+                 f">= 1, got {args.straggler_worker}")
+    if not args.ps_cluster:
+        # PS-cluster-only knobs must not be silently ignored in TPU mode
+        # (--straggler-worker is easy to confuse with TPU-mode --straggler)
+        if args.optimize_placement:
+            ap.error("--optimize-placement requires --ps-cluster")
+        if args.straggler_worker != 1.0:
+            ap.error("--straggler-worker requires --ps-cluster "
+                     "(TPU mode uses --straggler)")
 
     if args.ps_cluster:
         ps_cluster_main(args)

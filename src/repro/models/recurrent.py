@@ -16,7 +16,7 @@ stabilized exponential-gating recurrences of the xLSTM paper via
 from __future__ import annotations
 
 import math
-from typing import Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -15,9 +15,8 @@ Public API:
 """
 from __future__ import annotations
 
-import functools
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,7 +25,7 @@ from repro.parallel.sharding import shard
 from . import recurrent as rec
 from .config import ModelConfig
 from .layers import (Params, apply_mlp, apply_norm, attention_block,
-                     causal_mask, cross_attention_block, decode_attention,
+                     cross_attention_block, decode_attention,
                      dense_init, embed_init, init_attention, init_mlp,
                      init_norm, mha_logits_to_out)
 from .moe import apply_moe, init_moe

@@ -18,7 +18,7 @@ construction, so asynchrony appears at two levels:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Optional, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp

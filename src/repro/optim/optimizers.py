@@ -11,9 +11,8 @@ shardable with the same rules as the parameters they mirror).
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -68,7 +67,8 @@ def momentum(lr: float = 1e-2, beta: float = 0.9) -> Optimizer:
 def _adam_family(lr, b1, b2, eps, weight_decay, moment_dtype,
                  name) -> Optimizer:
     def init(params):
-        zeros = lambda p: jnp.zeros(p.shape, moment_dtype or p.dtype)
+        def zeros(p):
+            return jnp.zeros(p.shape, moment_dtype or p.dtype)
         return {"step": jnp.zeros((), jnp.int32),
                 "mu": _tree_map(zeros, params),
                 "nu": _tree_map(zeros, params)}

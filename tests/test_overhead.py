@@ -3,7 +3,6 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core.events import LINK
 from repro.core.overhead import (OverheadModel, RecordedOp, RecordedStep,
                                  preprocess_recorded_step)
 

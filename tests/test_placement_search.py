@@ -1,0 +1,217 @@
+"""Placement search engine: oracle agreement, determinism, validation.
+
+Covers: greedy and annealing vs the exhaustive oracle on small
+placement-sensitive topologies, serial == parallel determinism under a
+fixed seed, baseline never-worse guarantees, evaluator memoization, and
+input-validation errors for infeasible placements and oversized
+exhaustive spaces.  All through cheap synthetic templates
+(``evaluator_from_templates``) — the full-pipeline path
+(``evaluator_from_run``) is exercised by ``benchmarks/fig_placement.py``
+and the whatif CLI.
+"""
+import pytest
+
+from repro.core.events import Op, StepTemplate
+from repro.core.placement_search import (DEFAULT_MAX_EXHAUSTIVE,
+                                         evaluator_from_templates,
+                                         search_placement)
+from repro.core.topology import Node, Rack, Topology
+
+BW = 1e2
+
+
+def comm_heavy_steps(n_layers=3, size=200.0, compute=0.02, num_ps=1):
+    """Bandwidth-bound steps; layers round-robin over ``num_ps`` shards."""
+    ops = []
+    for i in range(n_layers):
+        p = i % num_ps
+        dn = "downlink" if num_ps == 1 else f"downlink:{p}"
+        up = "uplink" if num_ps == 1 else f"uplink:{p}"
+        dl = len(ops)
+        ops.append(Op(f"d{i}", dn, size=size))
+        ops.append(Op(f"f{i}", "worker", duration=compute, deps=(dl,)))
+        ops.append(Op(f"u{i}", up, size=size, deps=(dl + 1,)))
+    return [StepTemplate(ops=ops)]
+
+
+def rack_pool_topology(num_shards=2, oversub=8.0):
+    """Default placement behind an oversubscribed rack uplink; an equal
+    number of free nodes sit in the flat rack — the obvious optimum."""
+    bad = tuple(Node(f"bad{p}", rack="r0") for p in range(num_shards))
+    good = tuple(Node(f"good{p}", rack="r1") for p in range(num_shards))
+    return Topology(
+        workers=tuple(Node(f"w{i}", rack="r1") for i in range(3)),
+        ps_nodes=bad + good,
+        racks=(Rack("r0", oversubscription=oversub), Rack("r1")),
+        bandwidth=BW,
+    ).with_placement(tuple(n.name for n in bad))
+
+
+def make_evaluator(topo, num_ps=None, **kw):
+    num_ps = topo.num_shards if num_ps is None else num_ps
+    kw.setdefault("link_policy", "fifo")
+    return evaluator_from_templates(
+        topo, comm_heavy_steps(num_ps=num_ps), num_workers=3, n_runs=1,
+        steps_per_worker=12, **kw)
+
+
+class TestOracleAgreement:
+    @pytest.mark.parametrize("num_shards", [1, 2, 3])
+    def test_greedy_matches_exhaustive(self, num_shards):
+        topo = rack_pool_topology(num_shards)
+        ev = make_evaluator(topo)
+        exact = search_placement(ev, "exhaustive")
+        greedy = search_placement(ev, "greedy")
+        assert greedy.throughput >= 0.99 * exact.throughput
+
+    def test_greedy_matches_exhaustive_4_shards(self):
+        """4 shards over 5 hosts (sharding + colocation in play): the
+        largest cluster the ISSUE gates against the oracle."""
+        topo = rack_pool_topology(4)
+        ev = make_evaluator(topo)
+        hosts = ("bad0", "bad1", "good0", "good1", "w0")
+        exact = search_placement(ev, "exhaustive", hosts=hosts,
+                                 max_exhaustive=700)
+        greedy = search_placement(ev, "greedy", hosts=hosts)
+        assert greedy.throughput >= 0.99 * exact.throughput
+
+    def test_anneal_at_least_greedy(self):
+        topo = rack_pool_topology(2)
+        ev = make_evaluator(topo)
+        greedy = search_placement(ev, "greedy")
+        anneal = search_placement(ev, "anneal", seed=11)
+        assert anneal.throughput >= greedy.throughput
+
+    def test_finds_the_planted_optimum(self):
+        """With an 8x-oversubscribed default rack the flat-rack nodes are
+        the planted optimum; every strategy must escape the default."""
+        topo = rack_pool_topology(2)
+        ev = make_evaluator(topo)
+        for strategy in ("exhaustive", "greedy", "anneal"):
+            res = search_placement(ev, strategy)
+            assert res.speedup > 1.5, (strategy, res)
+            assert not any(h.startswith("bad") for h in res.placement)
+
+    def test_uniform_cluster_keeps_default(self):
+        """No structure -> nothing to gain; the default placement (or an
+        equivalent) must be returned, never something worse."""
+        topo = rack_pool_topology(2, oversub=1.0)
+        ev = make_evaluator(topo)
+        res = search_placement(ev, "greedy", colocation=False)
+        assert res.throughput >= res.baseline_throughput
+
+
+class TestDeterminism:
+    @pytest.mark.parametrize("strategy", ["greedy", "anneal"])
+    def test_serial_equals_parallel(self, monkeypatch, strategy):
+        topo = rack_pool_topology(2)
+        par = search_placement(make_evaluator(topo), strategy, seed=5)
+        monkeypatch.setenv("REPRO_SWEEP_SERIAL", "1")
+        ser = search_placement(make_evaluator(topo), strategy, seed=5)
+        assert ser.placement == par.placement
+        assert ser.throughput == par.throughput   # bit-identical
+
+    def test_fixed_seed_reproducible(self):
+        topo = rack_pool_topology(2)
+        a = search_placement(make_evaluator(topo), "anneal", seed=7)
+        b = search_placement(make_evaluator(topo), "anneal", seed=7)
+        assert (a.placement, a.throughput) == (b.placement, b.throughput)
+
+
+class TestEvaluator:
+    def test_memoizes(self):
+        ev = make_evaluator(rack_pool_topology(2))
+        s1 = ev.score(("good0", "good1"))
+        n = ev.evaluated
+        s2 = ev.score(("good0", "good1"))
+        assert s1 == s2 and ev.evaluated == n
+
+    def test_strategies_share_the_cache(self):
+        ev = make_evaluator(rack_pool_topology(2))
+        search_placement(ev, "exhaustive")
+        before = ev.evaluated
+        res = search_placement(ev, "greedy")
+        # greedy only revisits placements the oracle already scored
+        assert ev.evaluated == before
+        assert res.evaluated == 0
+
+    def test_candidate_hosts_order(self):
+        ev = make_evaluator(rack_pool_topology(1))
+        assert ev.candidate_hosts(colocation=False) == (
+            "bad0", "good0")
+        assert ev.candidate_hosts() == ("bad0", "good0", "w0", "w1", "w2")
+
+
+class TestValidation:
+    def test_unknown_strategy(self):
+        ev = make_evaluator(rack_pool_topology(1))
+        with pytest.raises(ValueError, match="unknown strategy"):
+            search_placement(ev, "ilp")
+
+    def test_unknown_host(self):
+        ev = make_evaluator(rack_pool_topology(1))
+        with pytest.raises(ValueError, match="not a node of this topology"):
+            search_placement(ev, "greedy", hosts=("good0", "nope"))
+
+    def test_duplicate_host(self):
+        ev = make_evaluator(rack_pool_topology(1))
+        with pytest.raises(ValueError, match="duplicate candidate host"):
+            search_placement(ev, "greedy", hosts=("good0", "good0"))
+
+    def test_empty_hosts(self):
+        ev = make_evaluator(rack_pool_topology(1))
+        with pytest.raises(ValueError, match="at least one candidate"):
+            search_placement(ev, "greedy", hosts=())
+
+    def test_wrong_placement_length(self):
+        ev = make_evaluator(rack_pool_topology(2))
+        with pytest.raises(ValueError, match="2 PS shard"):
+            ev.score(("good0",))
+
+    def test_bad_start_placement(self):
+        ev = make_evaluator(rack_pool_topology(2))
+        with pytest.raises(ValueError, match="not a node of this topology"):
+            search_placement(ev, "greedy", start=("good0", "zzz"))
+
+    def test_exhaustive_space_capped(self):
+        ev = make_evaluator(rack_pool_topology(2))
+        with pytest.raises(ValueError, match="use strategy='greedy'"):
+            search_placement(ev, "exhaustive", max_exhaustive=3)
+        assert DEFAULT_MAX_EXHAUSTIVE >= 4096
+
+
+class TestStragglerWhatIf:
+    """The ROADMAP straggler knob: Node.speed threads through prediction
+    AND the topology-aware emulator, and both report consistent
+    degradation (same measurement convention, same cluster)."""
+
+    def test_with_node_speed_validation(self):
+        t = Topology.star(2, 1)
+        with pytest.raises(ValueError, match="speed must be > 0"):
+            t.with_node_speed("w0", 0.0)
+        with pytest.raises(KeyError):
+            t.with_node_speed("nope", 0.5)
+
+    def test_with_node_speed_patches_one_node(self):
+        t = Topology.star(2, 1).with_node_speed("w0", 0.5)
+        assert t.node("w0").speed == 0.5
+        assert t.node("w1").speed == 1.0
+        assert t.node("ps0").speed == 1.0
+        assert t.worker_speeds() == {0: 0.5}
+
+    def test_predicted_degradation_matches_emulator(self):
+        """Predict the straggler ratio and validate it against the
+        topology-aware emulator (the satellite's acceptance check)."""
+        from repro.core.predictor import PredictionRun
+        base = PredictionRun(dnn="googlenet", batch_size=16,
+                             platform="private_cpu", profile_steps=15,
+                             sim_steps=80).prepare()
+        star = Topology.star(2, 1)
+        strag = star.with_node_speed("w0", 1.0 / 2.0)
+        pred_ratio = (base.with_topology(strag).predict(2, n_runs=2)
+                      / base.with_topology(star).predict(2, n_runs=2))
+        meas_ratio = (base.with_topology(strag).measure(2, steps=40)
+                      / base.with_topology(star).measure(2, steps=40))
+        assert pred_ratio < 0.8          # the slowdown is clearly visible
+        assert meas_ratio < 0.8
+        assert pred_ratio == pytest.approx(meas_ratio, abs=0.15)

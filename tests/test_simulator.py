@@ -1,5 +1,4 @@
 """Algorithm 3.1 simulator: exactness on crafted DAGs + invariants."""
-import math
 
 import pytest
 from _hypothesis_compat import given, settings, st

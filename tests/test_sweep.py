@@ -1,8 +1,4 @@
 """Parallel sweep engine: determinism (serial == parallel) and wiring."""
-import os
-
-import pytest
-
 from repro.core import sweep
 from repro.core.events import Op, StepTemplate, ps_resources
 from repro.core.simulator import SimConfig
@@ -33,6 +29,17 @@ def test_parallel_map_identical_to_serial():
 
 def test_parallel_map_preserves_order():
     assert sweep.parallel_map(abs, [-3, -1, -2]) == [3, 1, 2]
+
+
+def test_simulation_pool_reuses_executor():
+    tasks = _tasks()
+    serial = [sweep.simulate_task(t) for t in tasks]
+    with sweep.SimulationPool() as pool:
+        a = pool.map(tasks)
+        b = pool.map(tasks)       # second batch reuses the executor
+        assert pool._executor is not None
+    assert pool._executor is None  # context exit released the workers
+    assert a == serial and b == serial
 
 
 def test_serial_env_override(monkeypatch):
