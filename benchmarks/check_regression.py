@@ -48,12 +48,14 @@ def load(path: str) -> dict:
 
 
 def records(bench: dict) -> dict:
-    """(section, key) -> record, for both benchmark sections."""
+    """(section, key) -> record, for all benchmark sections."""
     out = {}
     for rec in bench.get("workloads", []):
         out[("workloads", rec["workload"], rec["W"])] = rec
     for rec in bench.get("general", []):
         out[("general", rec["mode"], rec["W"])] = rec
+    for rec in bench.get("syncmode", []):
+        out[("syncmode", rec["mode"], rec["W"])] = rec
     return out
 
 

@@ -1,0 +1,245 @@
+"""Synchronization regimes: mode x W x straggler x oversubscription.
+
+The paper predicts asynchronous PS training only; this figure sweeps the
+synchronization-semantics subsystem (``repro.core.syncmode``) across the
+regimes that dominate practice and asserts the qualitative behaviors the
+literature establishes (Shi et al., arXiv:1805.03812; Jin et al.,
+arXiv:1611.04581):
+
+  * **straggler dip**: with one worker's compute slowed 2x, synchronous
+    SGD throughput drops below async (every barrier waits for the
+    straggler), while async merely loses that worker's contribution;
+  * **backup workers**: a k-of-n barrier (1 backup) drops the straggler's
+    gradient instead of waiting and recovers most of the sync-vs-async
+    gap;
+  * **all-reduce vs PS**: when the PS NIC is the bottleneck, ring
+    all-reduce (per-worker volume 2(n-1)/n of the bytes, on each worker's
+    own NIC) beats PS training;
+  * **staleness**: every mode reports its version-lag distribution —
+    async lags grow with W, sync is identically 0, ssp sits in between.
+
+Straggler cells are averaged over the *all-active* window (fast workers
+retire their fixed step budget early; the common window would count the
+straggler-only tail and invert the comparison).  Two workloads, one per
+regime of interest: GoogLeNet at batch 16 (compute-heavy — visible
+straggler dip) for the mode x W x straggler x oversubscription sweep, and
+AlexNet at batch 8 (bandwidth-bound — the PS NIC saturates) for the
+all-reduce-vs-PS comparison; both on the private CPU cluster.  Slow mode
+adds emulator ground truth on the no-straggler star.  Writes
+``benchmarks/results/fig_syncmode.json``:
+
+    PYTHONPATH=src python -m benchmarks.fig_syncmode [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.core.predictor import PredictionRun
+from repro.core.simulator import Simulation
+from repro.core.sweep import measure_many, parallel_map
+from repro.core.topology import Node, Rack, Topology
+
+from .common import row, save_json
+
+DNN = "googlenet"
+BATCH = 16
+BOTTLENECK_DNN = "alexnet"      # bandwidth-bound: PS NIC saturates
+BOTTLENECK_BATCH = 8
+PLATFORM = "private_cpu"
+STRAGGLER = 2.0          # worker 0's compute slowed by this factor
+OVERSUB_RATIOS = (1.0, 4.0)
+
+# (label, PredictionRun sync kwargs)
+MODES = (
+    ("async", dict(sync_mode="async")),
+    ("sync", dict(sync_mode="sync")),
+    ("sync_backup1", dict(sync_mode="sync", backup_workers=1)),
+    ("ssp_s2", dict(sync_mode="ssp", staleness_bound=2)),
+    ("allreduce_ring", dict(sync_mode="allreduce", allreduce_algo="ring")),
+    ("allreduce_tree", dict(sync_mode="allreduce", allreduce_algo="tree")),
+)
+
+
+# the straggler-family modes all share one profiled template list; it is
+# shipped once per pool worker via the executor initializer instead of
+# being re-pickled inside every task (the sweep engine's shared-template
+# pattern; allreduce tasks keep their own per-W lists)
+_shared_tpls = None
+
+
+def _set_shared_tpls(tpls) -> None:
+    global _shared_tpls
+    _shared_tpls = tpls
+
+
+def _tput_task(task) -> dict:
+    """One seeded DES run -> all-active-window examples/s + staleness."""
+    cfg, templates, num_workers, batch_size, warmup_steps = task
+    if templates is None:
+        templates = _shared_tpls
+    trace = Simulation(cfg).run(templates, num_workers)
+    stats = trace.staleness_stats()
+    return {"tput": trace.throughput(batch_size, warmup_steps,
+                                     window="all-active"),
+            "stale_mean": stats["mean"], "stale_p99": stats["p99"],
+            "versions": trace.meta["num_versions"]}
+
+
+def _mode_runs(dnn: str, batch: int, profile_steps: int,
+               sim_steps: int, modes=MODES) -> dict:
+    """One PredictionRun per mode, all sharing a single async-PS profile
+    (the paper's premise: profile once, simulate every configuration)."""
+    runs = {}
+    base = PredictionRun(dnn=dnn, batch_size=batch, platform=PLATFORM,
+                         profile_steps=profile_steps,
+                         sim_steps=sim_steps).prepare()
+    for label, kw in modes:
+        r = PredictionRun(dnn=dnn, batch_size=batch, platform=PLATFORM,
+                          profile_steps=profile_steps, sim_steps=sim_steps,
+                          **kw)
+        r.profile = base.profile
+        r.overhead = base.overhead
+        r.sim_steps_templates = base.sim_steps_templates
+        runs[label] = r
+    return runs
+
+
+def ps_rack_topology(num_workers: int, ratio: float) -> Topology:
+    """PS isolated in rack r0 behind an oversubscribed uplink; workers
+    round-robin over two further racks (so all-reduce traffic crosses the
+    fabric too)."""
+    racks = (Rack("r0", oversubscription=ratio),
+             Rack("r1", oversubscription=ratio),
+             Rack("r2", oversubscription=ratio))
+    workers = tuple(Node(f"w{i}", rack=f"r{1 + i % 2}")
+                    for i in range(num_workers))
+    return Topology(workers=workers, ps_nodes=(Node("ps0", rack="r0"),),
+                    racks=racks)
+
+
+def run(fast: bool = False, workers=(1, 2, 4, 8), profile_steps=30,
+        sim_steps=250, n_runs=3, measure_steps=100) -> dict:
+    if fast:
+        workers = (1, 2, 4)
+        profile_steps, sim_steps, n_runs = 20, 150, 2
+    wmax = max(workers)
+    runs = _mode_runs(DNN, BATCH, profile_steps, sim_steps)
+    bn_modes = tuple((label, kw) for label, kw in MODES
+                     if label in ("async", "allreduce_ring",
+                                  "allreduce_tree"))
+    bn_runs = _mode_runs(BOTTLENECK_DNN, BOTTLENECK_BATCH, profile_steps,
+                         sim_steps, modes=bn_modes)
+    out = {"figure": "fig_syncmode", "dnn": DNN, "batch": BATCH,
+           "bottleneck_dnn": BOTTLENECK_DNN,
+           "bottleneck_batch": BOTTLENECK_BATCH,
+           "platform": PLATFORM, "workers": list(workers),
+           "straggler": STRAGGLER, "scenarios": {}, "staleness": {},
+           "checks": {}}
+
+    star = Topology.star(wmax, 1)
+    strag = star.with_node_speed("w0", 1.0 / STRAGGLER)
+    ps_slow_nic = Topology(
+        workers=tuple(Node(f"w{i}") for i in range(wmax)),
+        ps_nodes=(Node("ps0", nic=0.5),))
+
+    # -- build every simulation task up front; one pool fans them all.
+    # The main family's shared template list travels via the pool
+    # initializer (None slot); other lists stay inside their tasks.
+    shared = runs["async"].sim_steps_templates
+
+    def add_tasks(r, w):
+        for c, tpl, w_, b, wu in r.prediction_tasks(w, n_runs):
+            tasks.append((c, None if tpl is shared else tpl, w_, b, wu))
+
+    cells = []   # (scenario, mode, W, first task index, n_runs)
+    tasks = []
+    for scen, topo, family in (("star", star, runs),
+                               ("straggler", strag, runs),
+                               ("ps_bottleneck", ps_slow_nic, bn_runs)):
+        for label in family:
+            r = family[label].with_topology(topo)
+            for w in workers:
+                if label == "sync_backup1" and w < 2:
+                    continue
+                cells.append((scen, label, w, len(tasks), n_runs))
+                add_tasks(r, w)
+    for ratio in OVERSUB_RATIOS:
+        topo = ps_rack_topology(wmax, ratio)
+        for label in runs:
+            r = runs[label].with_topology(topo)
+            cells.append((f"oversub_{ratio}", label, wmax, len(tasks),
+                          n_runs))
+            add_tasks(r, wmax)
+    outs = parallel_map(_tput_task, tasks,
+                        initializer=_set_shared_tpls, initargs=(shared,))
+
+    print("scenario,mode,W,predicted,stale_mean,stale_p99")
+    scenarios: dict = {}
+    stale: dict = {}
+    for scen, label, w, i0, n in cells:
+        chunk = outs[i0:i0 + n]
+        tput = sum(o["tput"] for o in chunk) / n
+        s_mean = sum(o["stale_mean"] for o in chunk) / n
+        s_p99 = max(o["stale_p99"] for o in chunk)
+        cell = scenarios.setdefault(scen, {}).setdefault(
+            label, {"W": [], "predicted": []})
+        cell["W"].append(w)
+        cell["predicted"].append(tput)
+        if w == wmax:
+            stale.setdefault(scen, {})[label] = {
+                "mean": s_mean, "p99": s_p99,
+                "versions": chunk[0]["versions"]}
+        print(row(scen, label, w, f"{tput:.2f}", f"{s_mean:.2f}",
+                  f"{s_p99:.0f}"), flush=True)
+    out["scenarios"] = scenarios
+    out["staleness"] = stale
+
+    # -- emulator ground truth (slow mode; no-straggler star only) --------
+    if not fast:
+        measured = {}
+        for label in ("async", "sync", "allreduce_ring"):
+            r = runs[label].with_topology(star)
+            meas = measure_many(r, [wmax], steps=measure_steps)
+            measured[label] = meas[wmax]
+            print(row("measured_star", label, wmax,
+                      f"{meas[wmax]:.2f}", "-", "-"), flush=True)
+        out["measured_star"] = measured
+
+    # -- qualitative gates ------------------------------------------------
+    def at_wmax(scen: str, label: str) -> float:
+        cell = scenarios[scen][label]
+        return cell["predicted"][cell["W"].index(wmax)]
+
+    sync_s = at_wmax("straggler", "sync")
+    async_s = at_wmax("straggler", "async")
+    backup_s = at_wmax("straggler", "sync_backup1")
+    out["checks"]["sync_dips_under_straggler"] = sync_s < async_s
+    gap = async_s - sync_s
+    out["checks"]["backup_recovers_most"] = (
+        gap <= 0 or (backup_s - sync_s) >= 0.5 * gap)
+    out["checks"]["ring_beats_ps_at_ps_bottleneck"] = (
+        at_wmax("ps_bottleneck", "allreduce_ring")
+        > at_wmax("ps_bottleneck", "async"))
+    out["checks"]["sync_staleness_zero"] = (
+        stale["star"]["sync"]["p99"] == 0
+        and stale["star"]["allreduce_ring"]["p99"] == 0)
+    out["checks"]["async_staleness_grows"] = (
+        wmax < 2 or stale["star"]["async"]["mean"] > 0)
+
+    save_json("fig_syncmode", out)
+    print(f"# checks: {out['checks']}")
+    if not all(out["checks"].values()):
+        raise AssertionError(
+            f"qualitative sync-mode checks failed: {out['checks']}")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="CI-sized run")
+    args = ap.parse_args()
+    run(fast=args.fast)
+
+
+if __name__ == "__main__":
+    main()

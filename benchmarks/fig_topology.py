@@ -9,7 +9,10 @@ sweep engine (``repro.core.sweep``):
     grows (the fabric, not the PS NIC, becomes the bottleneck);
   * **placement**: one PS dedicated vs colocated with worker 0 — the
     shared host NIC carries the PS fan-in/out plus the worker's own
-    traffic, so the bottleneck shifts and scale-out flattens;
+    traffic, so the bottleneck shifts and scale-out flattens; the
+    colocated case is also run with ``loopback_bypass`` (w0's transfers
+    to its local shard skip the NIC groups), the before/after datapoint
+    for the localhost-bypass model;
   * **nic**: a 2x/4x PS NIC on a flat star — the PS link constraint
     relaxes and throughput scales further before saturating.
 
@@ -46,10 +49,11 @@ def ps_rack_topology(num_workers: int, num_ps: int, ratio: float) -> Topology:
         racks=(Rack("r0", oversubscription=ratio), Rack("r1")))
 
 
-def colocated_topology(num_workers: int) -> Topology:
+def colocated_topology(num_workers: int, bypass: bool = False) -> Topology:
     return Topology(
         workers=tuple(Node(f"w{i}") for i in range(num_workers)),
-        placement=Placement(("w0",)))
+        placement=Placement(("w0",)),
+        loopback_bypass=bypass)
 
 
 def star_with_ps_nic(num_workers: int, nic: float) -> Topology:
@@ -95,10 +99,14 @@ def run(fast: bool = False, workers=(1, 2, 4, 6, 8), profile_steps=30,
                       f"{meas[w]:.2f}" if meas else "-"), flush=True)
     out["scenarios"]["oversub"] = oversub
 
-    # -- PS placement: dedicated star vs colocated with worker 0 ------------
+    # -- PS placement: dedicated star vs colocated with worker 0, the
+    # latter with and without localhost loopback bypass (the colocated
+    # shard's w0 transfers skip the shared NIC when the bypass is on) -----
     placement = {}
     for name, topo in (("dedicated", Topology.star(wmax, 1)),
-                       ("colocated_w0", colocated_topology(wmax))):
+                       ("colocated_w0", colocated_topology(wmax)),
+                       ("colocated_w0_loopback",
+                        colocated_topology(wmax, bypass=True))):
         r = base1.with_topology(topo)
         pred = sweep.predict_many(r, workers, n_runs=n_runs)
         placement[name] = {"predicted": [pred[w] for w in workers]}
@@ -126,6 +134,9 @@ def run(fast: bool = False, workers=(1, 2, 4, 6, 8), profile_steps=30,
         b <= a * 1.02 for a, b in zip(ratios, ratios[1:]))
     out["checks"]["colocated_slower"] = (
         at_wmax(placement["colocated_w0"]) < at_wmax(placement["dedicated"]))
+    out["checks"]["loopback_bypass_helps"] = (
+        at_wmax(placement["colocated_w0_loopback"])
+        > at_wmax(placement["colocated_w0"]))
     caps = [at_wmax(nic[str(c)]) for c in PS_NICS]
     out["checks"]["fat_ps_nic_helps"] = caps[-1] > caps[0]
     save_json("fig_topology", out)

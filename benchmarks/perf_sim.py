@@ -64,13 +64,13 @@ def make_template(layers: int, seed: int = 0,
 
 
 def make_cfg(steps_per_worker: int, seed: int = 0, num_ps: int = 1,
-             bandwidth_model=None, topology=None) -> SimConfig:
+             bandwidth_model=None, topology=None, **sync_kw) -> SimConfig:
     return SimConfig(resources=ps_resources(1e9, num_ps),
                      topology=topology, bandwidth_model=bandwidth_model,
                      link_policy="http2",
                      win=2.8e6, steps_per_worker=steps_per_worker,
                      warmup_steps=10, seed=seed, service_jitter=0.08,
-                     stall_alpha=2e-9, stall_rtt=5e-4)
+                     stall_alpha=2e-9, stall_rtt=5e-4, **sync_kw)
 
 
 def time_engine(sim_cls, tpls, cfg_fn, num_workers: int, reps: int):
@@ -159,6 +159,59 @@ def run(fast: bool = False, skip_ref: bool = False,
                    "throughput": tput_new, "throughput_ref": tput_ref}
             out["general"].append(rec)
             print(f"general,{mode},{w},{t_new:.3f},"
+                  f"{t_ref if t_ref is None else round(t_ref, 3)},"
+                  f"{rec['speedup'] and round(rec['speedup'], 2)},"
+                  f"{events},{events / t_new:.0f}", flush=True)
+
+    # synchronization-mode path (repro.core.syncmode): the step-barrier
+    # controllers (sync/ssp) and the collective-DAG rewrite (allreduce),
+    # timed against the frozen reference engine running the plain async
+    # semantics on the same template family — the machine-independent
+    # denominator check_regression.py gates on (a regression anywhere in
+    # the sync path shows up as a speedup drop)
+    from repro.core.syncmode import allreduce_templates
+    name, layers, steps = sizes[min(1, len(sizes) - 1)]
+    sp = steps // 4 if fast else steps
+    tpls_sync = [make_template(layers, seed=s) for s in range(3)]
+    sync_cases = (
+        ("sync", dict(sync_mode="sync")),
+        ("sync_backup", dict(sync_mode="sync", backup_workers=1)),
+        ("ssp", dict(sync_mode="ssp", staleness_bound=2)),
+        ("allreduce", dict(sync_mode="allreduce")),
+    )
+    out["syncmode"] = []
+    print("syncmode,mode,W,engine_s,ref_s,speedup,events,events_per_s")
+    for mode, kw in sync_cases:
+        for w in workers:
+            if kw.get("backup_workers", 0) >= w:
+                continue
+            if mode == "allreduce":
+                tpls_mode = allreduce_templates(tpls_sync, w, bandwidth=1e9,
+                                                rtt=5e-4)
+            else:
+                tpls_mode = tpls_sync
+
+            def cfg_fn(rep, kw=kw):
+                return make_cfg(sp, seed=rep, **kw)
+
+            t_new, events, tput_new = time_engine(
+                Simulation, tpls_mode, cfg_fn, w, reps)
+            if skip_ref:
+                t_ref = tput_ref = None
+            else:
+                # the frozen engine predates the sync layer and ignores the
+                # sync fields: same resources, plain async semantics — the
+                # stable denominator for the speedup column
+                t_ref, _e, tput_ref = time_engine(
+                    ReferenceSimulation, tpls_mode, cfg_fn, w, reps)
+            rec = {"mode": mode, "workload": name, "W": w,
+                   "steps_per_worker": sp, "engine_s": t_new,
+                   "ref_s": t_ref,
+                   "speedup": (t_ref / t_new) if t_ref else None,
+                   "events": events, "events_per_s": events / t_new,
+                   "throughput": tput_new, "throughput_ref": tput_ref}
+            out["syncmode"].append(rec)
+            print(f"syncmode,{mode},{w},{t_new:.3f},"
                   f"{t_ref if t_ref is None else round(t_ref, 3)},"
                   f"{rec['speedup'] and round(rec['speedup'], 2)},"
                   f"{events},{events / t_new:.0f}", flush=True)

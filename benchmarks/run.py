@@ -21,14 +21,14 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help="comma-separated subset (fig13,fig14,table1,"
                          "fig10,fig18,fig20,fig22,fig25,fig16,figtopo,"
-                         "figplace,roofline)")
+                         "figplace,figsync,roofline)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     from . import (fig10_overhead, fig13_batch_sizes, fig14_models,
                    fig16_interleaving, fig18_orderings, fig20_cloud,
-                   fig22_runtime, fig25_two_ps, fig_placement, fig_topology,
-                   roofline, table1_multiplexing)
+                   fig22_runtime, fig25_two_ps, fig_placement, fig_syncmode,
+                   fig_topology, roofline, table1_multiplexing)
 
     fast = args.fast
     jobs = [
@@ -61,6 +61,7 @@ def main() -> None:
             workers=(1, 2, 4) if fast else (1, 2, 4, 6, 8))),
         ("figtopo", lambda: fig_topology.run(fast=fast)),
         ("figplace", lambda: fig_placement.run(fast=fast)),
+        ("figsync", lambda: fig_syncmode.run(fast=fast)),
         ("roofline", lambda: roofline.run()),
     ]
 

@@ -11,8 +11,11 @@ from .paper_models import PAPER_DNNS, PLATFORMS
 from .placement_search import (PlacementEvaluator, SearchResult,
                                evaluator_from_run, evaluator_from_templates,
                                search_placement)
+from .collectives import allreduce_duration, ring_volume
 from .predictor import PredictionRun, calibrate_overhead, prediction_error
 from .simulator import SimConfig, Simulation, predict_throughput
+from .syncmode import (SYNC_MODES, SyncSpec, allreduce_templates,
+                       make_controller, staleness_stats)
 from .topology import (Node, Placement, Rack, Topology,
                        TopologyBandwidthModel)
 # NOTE: ``repro.core.sweep`` is the parallel sweep-engine MODULE; the
@@ -32,4 +35,6 @@ __all__ = [
     "PlacementEvaluator", "SearchResult", "evaluator_from_run",
     "evaluator_from_templates", "search_placement",
     "measure_many", "parallel_map", "predict_many", "sweep_parallel",
+    "SYNC_MODES", "SyncSpec", "allreduce_templates", "make_controller",
+    "staleness_stats", "allreduce_duration", "ring_volume",
 ]

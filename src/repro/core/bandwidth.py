@@ -110,10 +110,16 @@ def two_level_groups(conns: Sequence[Conn],
                      worker_caps: Optional[Mapping[int, float]] = None,
                      default_link_cap: float = 1.0,
                      default_worker_cap: float = 1.0,
+                     worker_dir_caps: Optional[Mapping[Tuple[int, str],
+                                                       float]] = None,
                      ) -> Tuple[Dict[object, float], Dict[object, list]]:
     """The paper's two-level group structure over a connection list: one
     group per link resource, one per (worker, direction) NIC.  Every
-    grouped model starts from this and layers extra groups on top."""
+    grouped model starts from this and layers extra groups on top.
+
+    ``worker_dir_caps`` maps (worker, 'uplink'|'downlink') to a
+    per-direction NIC capacity (asymmetric tx/rx ports) and wins over the
+    symmetric ``worker_caps`` entry for that worker."""
     link_members: Dict[str, list] = {}
     nic_members: Dict[Tuple[int, str], list] = {}
     for c in conns:
@@ -127,8 +133,12 @@ def two_level_groups(conns: Sequence[Conn],
         caps[("link", r)] = (link_caps or {}).get(r, default_link_cap)
         members[("link", r)] = ms
     for k, ms in nic_members.items():
-        caps[("nic",) + k] = (worker_caps or {}).get(k[0],
-                                                    default_worker_cap)
+        cap = None
+        if worker_dir_caps is not None:
+            cap = worker_dir_caps.get(k)
+        if cap is None:
+            cap = (worker_caps or {}).get(k[0], default_worker_cap)
+        caps[("nic",) + k] = cap
         members[("nic",) + k] = ms
     return caps, members
 

@@ -242,6 +242,10 @@ class Trace:
     records: List[TraceRecord] = field(default_factory=list)
     # (worker, step_seq) -> completion time
     step_completions: List[Tuple[int, int, float]] = field(default_factory=list)
+    # per completed step, in completion order: version lag of the applied
+    # update (updates by other workers between parameter read and apply) —
+    # the staleness accounting of ``repro.core.syncmode``
+    staleness: List[int] = field(default_factory=list)
 
     def add(self, worker: int, res: str, name: str, step_seq: int,
             start: float, end: float) -> None:
@@ -250,29 +254,44 @@ class Trace:
     def complete_step(self, worker: int, step_seq: int, t: float) -> None:
         self.step_completions.append((worker, step_seq, t))
 
-    def throughput(self, batch_size: int, warmup_steps: int = 50) -> float:
+    def staleness_stats(self) -> Dict[str, float]:
+        """mean/p50/p99/max version lag over all completed steps."""
+        from .syncmode import staleness_stats
+        return staleness_stats(self.staleness)
+
+    def throughput(self, batch_size: int, warmup_steps: int = 50,
+                   window: str = "common") -> float:
         """examples/s over the post-warmup window (paper §4.1).
 
         The paper discards the first ``warmup_steps`` *per worker* to let the
         workers drift out of their synchronized start, then time-averages.
+
+        ``window="common"`` (default, the paper's convention) ends the
+        window at the last completion overall; ``"all-active"`` ends it at
+        the *earliest* per-worker last completion, excluding the tail where
+        fast workers have already retired and only stragglers still run —
+        the fair steady-state window when worker speeds are heterogeneous
+        (a fixed per-worker step budget otherwise lets the straggler-only
+        tail dominate the average).
         """
+        if window not in ("common", "all-active"):
+            raise ValueError(f"unknown throughput window {window!r}")
         if not self.step_completions:
             return 0.0
         per_worker: Dict[int, List[float]] = {}
         for w, _seq, t in self.step_completions:
             per_worker.setdefault(w, []).append(t)
-        # Use a common window: from the latest per-worker warmup boundary to
-        # the latest completion. Conservative and stable for N >= 200.
+        # Common window: from the latest per-worker warmup boundary to the
+        # latest completion. Conservative and stable for N >= 200.
         boundaries = []
         ends = []
-        total = 0
         for w, times in per_worker.items():
             times.sort()
             k = warmup_steps if len(times) > warmup_steps else max(1, len(times) // 2)
             boundaries.append(times[k - 1])
             ends.append(times[-1])
         window_start = max(boundaries)
-        window_end = max(ends)
+        window_end = max(ends) if window == "common" else min(ends)
         if window_end <= window_start:
             return 0.0
         n_in_window = sum(

@@ -159,6 +159,10 @@ def evaluator_from_run(run, topology: Topology, num_workers: int,
     templates simulated at ``num_workers`` under each candidate placement
     of ``topology`` (profiling happens once — the paper's own premise —
     and every candidate reuses it)."""
+    if hasattr(run, "sync_spec") and run.sync_spec().mode == "allreduce":
+        raise ValueError(
+            "placement search scores PS shard placements; the allreduce "
+            "regime has no parameter servers to place")
     if not run.sim_steps_templates:
         run.prepare()
 

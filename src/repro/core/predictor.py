@@ -19,7 +19,8 @@ from repro.core.events import StepTemplate, ps_resources
 from repro.core.overhead import (OverheadModel, RecordedStep,
                                  preprocess_profile)
 from repro.core.paper_models import PAPER_DNNS, PLATFORMS, Platform
-from repro.core.simulator import SimConfig
+from repro.core.simulator import SimConfig, Simulation
+from repro.core.syncmode import SyncSpec, allreduce_templates
 from repro.core.topology import Topology
 from repro.emulator.cluster import (measure_throughput, probe_parse_overheads,
                                     profile_single_worker)
@@ -54,6 +55,15 @@ class PredictionRun:
     # the bandwidth model, compute speed factors, and the emulator's
     # ground-truth fabric.
     topology: Optional[Topology] = None
+    # Synchronization regime (repro.core.syncmode).  Profiling stays
+    # async-PS — the 1-worker profile already carries the per-layer sizes
+    # and compute durations every regime needs — and the mode enters
+    # through the simulator's step-barrier controller (sync/ssp) or a
+    # per-W rewrite of the step DAG (allreduce).
+    sync_mode: str = "async"
+    backup_workers: int = 0
+    staleness_bound: int = 0
+    allreduce_algo: str = "ring"
 
     # filled by prepare()
     profile: List[RecordedStep] = field(default_factory=list)
@@ -68,6 +78,13 @@ class PredictionRun:
                     f"num_ps={self.num_ps} conflicts with topology "
                     f"({shards} PS shard(s)); omit num_ps or make them match")
             self.num_ps = shards
+        self.sync_spec()   # validates mode/backup/bound/algo early
+
+    def sync_spec(self) -> SyncSpec:
+        return SyncSpec(mode=self.sync_mode,
+                        backup_workers=self.backup_workers,
+                        staleness_bound=self.staleness_bound,
+                        allreduce_algo=self.allreduce_algo)
 
     def prepare(self) -> "PredictionRun":
         plat = PLATFORMS[self.platform]
@@ -130,7 +147,35 @@ class PredictionRun:
             stall_alpha=alpha if policy == "http2" else 0.0,
             stall_rtt=plat.rtt if policy == "http2" else 0.0,
             service_jitter=plat.noise_bandwidth,
+            sync_mode=self.sync_mode,
+            backup_workers=self.backup_workers,
+            staleness_bound=self.staleness_bound,
+            allreduce_algo=self.allreduce_algo,
         )
+
+    def templates_for(self, num_workers: int) -> list:
+        """Simulation-ready step templates for a W-worker run: the
+        profiled templates for the PS regimes, or their per-W all-reduce
+        rewrite (collective volume is 2(n-1)/n of the bytes, so the DAG
+        depends on the worker count).  Cached per W."""
+        if not self.sim_steps_templates:
+            self.prepare()
+        if self.sync_spec().mode != "allreduce":
+            return self.sim_steps_templates
+        cache = getattr(self, "_allreduce_tpl_cache", None)
+        if cache is None:
+            cache = {}
+            self._allreduce_tpl_cache = cache
+        if num_workers not in cache:
+            plat = PLATFORMS[self.platform]
+            bw = plat.bandwidth
+            if self.topology is not None and self.topology.bandwidth:
+                bw = self.topology.bandwidth
+            cache[num_workers] = allreduce_templates(
+                self.sim_steps_templates, num_workers, bandwidth=bw,
+                algo=self.allreduce_algo, rtt=plat.rtt,
+                topology=self.topology)
+        return cache[num_workers]
 
     def prediction_tasks(self, num_workers: int, n_runs: int = 3) -> list:
         """The fully-seeded simulation tasks behind :meth:`predict`.
@@ -139,15 +184,24 @@ class PredictionRun:
         seed), so running them serially in-process or fanned across a
         process pool (``repro.core.sweep``) gives bit-identical results.
         """
-        if not self.sim_steps_templates:
-            self.prepare()
+        templates = self.templates_for(num_workers)
         tasks = []
         for i in range(n_runs):
             cfg = self._sim_cfg()
             cfg.seed = cfg.seed + 101 * i
-            tasks.append((cfg, self.sim_steps_templates, num_workers,
+            tasks.append((cfg, templates, num_workers,
                           self.batch_size, self.warmup_steps))
         return tasks
+
+    def staleness_report(self, num_workers: int) -> Dict[str, float]:
+        """Staleness distribution (mean/p50/p99/max version lag) of one
+        representative seeded simulation at W workers, plus the number of
+        global versions committed."""
+        cfg, templates, W, _b, _w = self.prediction_tasks(num_workers, 1)[0]
+        trace = Simulation(cfg).run(templates, W)
+        stats = trace.staleness_stats()
+        stats["versions"] = trace.meta["num_versions"]
+        return stats
 
     def predict(self, num_workers: int, n_runs: int = 3,
                 parallel: bool = False) -> float:
@@ -195,7 +249,8 @@ class PredictionRun:
             dnn, self.batch_size, plat, num_workers, num_ps=self.num_ps,
             steps=steps, seed=self.seed + seed_offset,
             flow_control=self.flow_control, order=self.order,
-            warmup_steps=self.warmup_steps, topology=self.topology)
+            warmup_steps=self.warmup_steps, topology=self.topology,
+            sync=self.sync_spec())
 
 
 def prediction_error(predicted: float, measured: float) -> float:

@@ -41,9 +41,11 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from .bandwidth import BandwidthModel, EqualShareModel
-from .events import (LINK, Chunk, LiveOp, ResourceSpec, StepTemplate, Trace)
+from .events import (COMPUTE, LINK, Chunk, LiveOp, ResourceSpec,
+                     StepTemplate, Trace)
 from .fluidlink import EqualShareLink
 from .schedulers import FifoScheduler, Scheduler, make_link_scheduler
+from .syncmode import SyncSpec, make_controller
 from .topology import Topology
 
 # A chunk completes when its remaining work is within this of zero — the
@@ -106,6 +108,22 @@ class SimConfig:
     # 'worker'/'parse' ops, per resource name for PS update ops.
     worker_speed: Optional[Dict[int, float]] = None
     res_speed: Optional[Dict[str, float]] = None
+    # Synchronization regime (repro.core.syncmode).  "async" is the paper's
+    # semantics and stays bit-identical to the frozen reference engine;
+    # "sync" adds a k-of-n barrier (k = W - backup_workers), "ssp" bounds
+    # the iteration lead over the slowest worker, "allreduce" runs the
+    # decentralized collective DAG under a full barrier.  All modes report
+    # a staleness distribution in the trace.
+    sync_mode: str = "async"
+    backup_workers: int = 0
+    staleness_bound: int = 0
+    allreduce_algo: str = "ring"
+
+    def sync_spec(self) -> SyncSpec:
+        return SyncSpec(mode=self.sync_mode,
+                        backup_workers=self.backup_workers,
+                        staleness_bound=self.staleness_bound,
+                        allreduce_algo=self.allreduce_algo)
 
     def __post_init__(self):
         if self.resources is None:
@@ -164,6 +182,13 @@ class SimConfig:
             if s <= 0:
                 raise ValueError(
                     f"resource {r!r}: compute speed must be > 0, got {s}")
+        spec = self.sync_spec()   # validates mode/backup/bound/algo
+        if spec.mode == "allreduce" and "collective" not in self.resources:
+            # the collective phases of the mode-aware step DAG run on a
+            # private per-worker resource (rate compiled from the topology
+            # by repro.core.collectives, so no dynamic sharing state)
+            self.resources = dict(self.resources)
+            self.resources["collective"] = ResourceSpec("collective", COMPUTE)
 
 
 class Simulation:
@@ -193,6 +218,12 @@ class Simulation:
         resources = self.resources
         rng = self.rng
         trace = Trace()
+        sync = cfg.sync_spec()
+        # step-barrier state machine + iteration-version (staleness)
+        # accounting; the async controller is pure bookkeeping (no RNG, no
+        # times), preserving golden-trace equivalence on the default path.
+        # (Validates the barrier quorum against num_workers.)
+        sync_ctl = make_controller(sync, num_workers)
         # Uniform per-link rates hold exactly for the equal-share rule; any
         # other model may split a link unevenly (NIC coupling) and uses the
         # per-connection fallback.
@@ -270,6 +301,7 @@ class Simulation:
         tpl_cache: Dict[int, tuple] = {}
 
         def start_step(w: int, t: float) -> None:
+            sync_ctl.on_step_start(w)
             tpl = next_step(w)
             cached = tpl_cache.get(id(tpl))
             if cached is None:
@@ -558,8 +590,11 @@ class Simulation:
                     completed[w] += 1
                     steps_done += 1
                     trace.complete_step(w, completed[w] - 1, t)
-                    if completed[w] < cfg.steps_per_worker:
-                        start_step(w, t)
+                    lag, released = sync_ctl.on_step_complete(w, t)
+                    trace.staleness.append(lag)
+                    for rw in released:
+                        if completed[rw] < cfg.steps_per_worker:
+                            start_step(rw, t)
 
             finalize_batch(t)
 
@@ -568,6 +603,9 @@ class Simulation:
             "steps_per_worker": cfg.steps_per_worker,
             "sim_end_time": t,
             "num_events": n_events,
+            "sync_mode": sync.mode,
+            "num_versions": sync_ctl.version,
+            "barrier_commits": list(sync_ctl.commits),
         }
         if cfg.record_op_times:
             trace.op_times = op_times  # type: ignore[attr-defined]

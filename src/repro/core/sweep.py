@@ -138,13 +138,14 @@ def simulate_task(task: SimTask) -> float:
 def measure_task(args: tuple) -> float:
     """One seeded cluster-emulator measurement -> examples/s."""
     (dnn, batch_size, platform, num_workers, num_ps, steps, seed,
-     flow_control, order, warmup_steps, topology) = args
+     flow_control, order, warmup_steps, topology, sync) = args
     from repro.core.paper_models import PAPER_DNNS, PLATFORMS
     from repro.emulator.cluster import measure_throughput
     return measure_throughput(
         PAPER_DNNS[dnn], batch_size, PLATFORMS[platform], num_workers,
         num_ps=num_ps, steps=steps, seed=seed, flow_control=flow_control,
-        order=order, warmup_steps=warmup_steps, topology=topology)
+        order=order, warmup_steps=warmup_steps, topology=topology,
+        sync=sync)
 
 
 def _run_tagged(tagged: tuple) -> float:
@@ -155,9 +156,19 @@ def _run_tagged(tagged: tuple) -> float:
 
 
 def _measure_args(run, num_workers: int, steps: int, seed_offset: int) -> tuple:
+    sync = run.sync_spec() if hasattr(run, "sync_spec") else None
     return (run.dnn, run.batch_size, run.platform, num_workers, run.num_ps,
             steps, run.seed + seed_offset, run.flow_control, run.order,
-            run.warmup_steps, getattr(run, "topology", None))
+            run.warmup_steps, getattr(run, "topology", None), sync)
+
+
+def _shared_templates(run) -> Optional[list]:
+    """The template list shared by every simulation task of ``run``, or
+    None when templates vary per worker count (the all-reduce regime: the
+    collective DAG depends on W, so each task must carry its own list)."""
+    if hasattr(run, "sync_spec") and run.sync_spec().mode == "allreduce":
+        return None
+    return run.sim_steps_templates
 
 
 def _group_means(outs: Sequence[float], workers: Sequence[int],
@@ -257,7 +268,7 @@ def predict_many(run, workers: Sequence[int], n_runs: int = 3,
     tasks: List[SimTask] = []
     for w in workers:
         tasks.extend(run.prediction_tasks(w, n_runs))
-    outs = simulate_all(tasks, templates=run.sim_steps_templates,
+    outs = simulate_all(tasks, templates=_shared_templates(run),
                         parallel=parallel, max_workers=max_workers)
     return _group_means(outs, workers, n_runs)
 
@@ -283,18 +294,20 @@ def predict_and_measure(run, workers: Sequence[int], n_runs: int = 3,
     """Fan ALL of a figure's simulation + measurement tasks in one pool."""
     if not run.sim_steps_templates:
         run.prepare()
+    shared = _shared_templates(run)
     tagged: List[tuple] = []
     for w in workers:
         for task in run.prediction_tasks(w, n_runs):
-            tagged.append(("sim", _strip_templates(task)))
+            tagged.append(("sim", _strip_templates(task) if shared is not None
+                           else task))
     for w in workers:
         for i in range(measure_runs):
             tagged.append(("meas", _measure_args(run, w, measure_steps,
                                                  1000 + 37 * i)))
-    outs = parallel_map(_run_tagged, tagged, max_workers=max_workers,
-                        parallel=parallel,
-                        initializer=_set_worker_templates,
-                        initargs=(run.sim_steps_templates,))
+    outs = parallel_map(
+        _run_tagged, tagged, max_workers=max_workers, parallel=parallel,
+        initializer=None if shared is None else _set_worker_templates,
+        initargs=() if shared is None else (shared,))
     pred = _group_means(outs, workers, n_runs)
     meas = _group_means(outs, workers, measure_runs,
                         offset=len(workers) * n_runs)

@@ -34,10 +34,14 @@ A topology compiles down to:
   * ``worker_speeds()`` / ``res_speeds()`` — compute speed factors for the
     simulator's compute resources.
 
-Modeling choices (documented, deliberate): loopback transfers of a
-colocated shard still traverse the host's shared-NIC group (gRPC localhost
-serializes through the stack; this is the conservative choice), and rack
-fabrics are full-duplex with one capacity per direction.
+Modeling choices (documented, deliberate): rack fabrics are full-duplex
+with one capacity per direction; NIC ports may be provisioned
+asymmetrically per direction (``Node.nic_tx`` / ``Node.nic_rx``, defaulting
+to the symmetric ``nic``).  Loopback transfers of a colocated shard
+traverse the host's shared-NIC group by default (gRPC localhost serializes
+through the stack; the conservative choice); ``Topology.loopback_bypass``
+reroutes them onto a per-node loopback group at ``loopback_capacity``
+multiples of the nominal NIC instead.
 """
 from __future__ import annotations
 
@@ -54,12 +58,18 @@ __all__ = ["Node", "Rack", "Placement", "Topology", "TopologyBandwidthModel"]
 @dataclass(frozen=True)
 class Node:
     """One machine: NIC capacity and compute speed, both as factors of the
-    platform nominal (1.0 = the profiled machine)."""
+    platform nominal (1.0 = the profiled machine).
+
+    ``nic`` is the symmetric capacity; ``nic_tx`` / ``nic_rx`` override it
+    per physical direction (full-duplex ports with asymmetric provisioning,
+    e.g. a 25/10 GbE access NIC), defaulting to ``nic`` when unset."""
 
     name: str
     nic: float = 1.0
     speed: float = 1.0
     rack: Optional[str] = None
+    nic_tx: Optional[float] = None
+    nic_rx: Optional[float] = None
 
     def __post_init__(self):
         if not self.name:
@@ -67,9 +77,24 @@ class Node:
         if self.nic <= 0:
             raise ValueError(
                 f"node {self.name!r}: nic capacity must be > 0, got {self.nic}")
+        for label, v in (("nic_tx", self.nic_tx), ("nic_rx", self.nic_rx)):
+            if v is not None and v <= 0:
+                raise ValueError(
+                    f"node {self.name!r}: {label} capacity must be > 0, "
+                    f"got {v}")
         if self.speed <= 0:
             raise ValueError(
                 f"node {self.name!r}: compute speed must be > 0, got {self.speed}")
+
+    @property
+    def tx(self) -> float:
+        """Transmit-direction capacity (falls back to the symmetric nic)."""
+        return self.nic_tx if self.nic_tx is not None else self.nic
+
+    @property
+    def rx(self) -> float:
+        """Receive-direction capacity (falls back to the symmetric nic)."""
+        return self.nic_rx if self.nic_rx is not None else self.nic
 
 
 @dataclass(frozen=True)
@@ -119,6 +144,15 @@ class Topology:
     racks: Tuple[Rack, ...] = ()
     placement: Optional[Placement] = None
     bandwidth: Optional[float] = None
+    # Loopback bypass for colocated PS shards: transfers between a worker
+    # and a shard hosted on its own node skip every NIC/rack capacity group
+    # and ride a per-node loopback group instead (gRPC over localhost still
+    # serializes through the stack — hence a finite ``loopback_capacity``
+    # in multiples of the nominal NIC, not an infinite rate).  False keeps
+    # the historical conservative model (loopback traverses the shared
+    # NIC group).
+    loopback_bypass: bool = False
+    loopback_capacity: float = 8.0
 
     def __post_init__(self):
         object.__setattr__(self, "workers", tuple(self.workers))
@@ -129,6 +163,10 @@ class Topology:
         if self.bandwidth is not None and self.bandwidth <= 0:
             raise ValueError(
                 f"nominal bandwidth must be > 0, got {self.bandwidth}")
+        if self.loopback_capacity <= 0:
+            raise ValueError(
+                f"loopback_capacity must be > 0, got "
+                f"{self.loopback_capacity}")
         names: Set[str] = set()
         for n in self.workers + self.ps_nodes:
             if n.name in names:
@@ -190,7 +228,8 @@ class Topology:
         setting: no racks, homogeneous NICs, one dedicated node per shard."""
         if self.racks:
             return False
-        if any(n.nic != 1.0 for n in self.workers + self.ps_nodes):
+        if any(n.nic != 1.0 or n.tx != 1.0 or n.rx != 1.0
+               for n in self.workers + self.ps_nodes):
             return False
         hosts = self._shard_hosts()
         worker_names = {n.name for n in self.workers}
@@ -231,10 +270,7 @@ class Topology:
         return cls(workers=ws, ps_nodes=ps, racks=rs, bandwidth=bandwidth)
 
     def with_placement(self, shard_hosts: Sequence[str]) -> "Topology":
-        return Topology(workers=self.workers, ps_nodes=self.ps_nodes,
-                        racks=self.racks,
-                        placement=Placement(tuple(shard_hosts)),
-                        bandwidth=self.bandwidth)
+        return replace(self, placement=Placement(tuple(shard_hosts)))
 
     def with_node_speed(self, name: str, speed: float) -> "Topology":
         """Clone with node ``name``'s compute speed replaced — the
@@ -248,10 +284,8 @@ class Topology:
         def patch(nodes: Tuple[Node, ...]) -> Tuple[Node, ...]:
             return tuple(replace(n, speed=speed) if n.name == name else n
                          for n in nodes)
-        return Topology(workers=patch(self.workers),
-                        ps_nodes=patch(self.ps_nodes),
-                        racks=self.racks, placement=self.placement,
-                        bandwidth=self.bandwidth)
+        return replace(self, workers=patch(self.workers),
+                       ps_nodes=patch(self.ps_nodes))
 
     # ---------------------------------------------------------- compilation
 
@@ -271,6 +305,40 @@ class Topology:
                 "topology has no nominal bandwidth; pass default_bandwidth= "
                 "to resources() or set Topology.bandwidth")
         return ps_resources(bw, self.num_shards)
+
+    def rack_uplink_caps(self) -> Dict[str, Tuple[float, float]]:
+        """(egress, ingress) fabric capacity per rack, in multiples of the
+        nominal NIC bandwidth: the explicit ``uplink_capacity``, or the
+        member nodes' aggregate per-direction NIC capacity divided by the
+        oversubscription ratio.  Racks without members are omitted."""
+        out: Dict[str, Tuple[float, float]] = {}
+        for rack in self.racks:
+            members = [n for n in self.workers + self.ps_nodes
+                       if n.rack == rack.name]
+            if not members:
+                continue
+            if rack.uplink_capacity is not None:
+                out[rack.name] = (rack.uplink_capacity, rack.uplink_capacity)
+            else:
+                out[rack.name] = (
+                    sum(n.tx for n in members) / rack.oversubscription,
+                    sum(n.rx for n in members) / rack.oversubscription)
+        return out
+
+    def loopback_conns(self) -> Set[Tuple[int, str]]:
+        """(worker, link) connections that never leave their host node: a
+        worker talking to a PS shard colocated on its own machine.  Empty
+        unless ``loopback_bypass`` is set."""
+        if not self.loopback_bypass:
+            return set()
+        worker_idx = {n.name: i for i, n in enumerate(self.workers)}
+        out: Set[Tuple[int, str]] = set()
+        for p in range(self.num_shards):
+            w = worker_idx.get(self.shard_host(p).name)
+            if w is not None:
+                out.add((w, self.link_name("downlink", p)))
+                out.add((w, self.link_name("uplink", p)))
+        return out
 
     def grouped_model(self) -> "TopologyBandwidthModel":
         return TopologyBandwidthModel(self)
@@ -326,15 +394,30 @@ class TopologyBandwidthModel(BandwidthModel):
         dl = [topology.link_name("downlink", p) for p in range(M)]
         ul = [topology.link_name("uplink", p) for p in range(M)]
 
-        # per-link capacity = shard host NIC
+        # per-link capacity = shard host NIC in the link's physical
+        # direction (downlink: host transmits; uplink: host receives)
         self.link_caps: Dict[str, float] = {}
         for p in range(M):
-            nic = topology.shard_host(p).nic
-            self.link_caps[dl[p]] = nic
-            self.link_caps[ul[p]] = nic
-        # per-worker NIC capacity
-        self.worker_caps: Dict[int, float] = {
-            i: n.nic for i, n in enumerate(topology.workers)}
+            host = topology.shard_host(p)
+            self.link_caps[dl[p]] = host.tx
+            self.link_caps[ul[p]] = host.rx
+        # per-(worker, direction) NIC capacity (uplink: worker transmits)
+        self.worker_dir_caps: Dict[Tuple[int, str], float] = {}
+        for i, n in enumerate(topology.workers):
+            self.worker_dir_caps[(i, "uplink")] = n.tx
+            self.worker_dir_caps[(i, "downlink")] = n.rx
+
+        # loopback-bypass connections skip every NIC/rack group and ride a
+        # per-host-node loopback group instead
+        self.loopback_conns = frozenset(topology.loopback_conns())
+        lb_by_node: Dict[str, List[Tuple[int, str]]] = {}
+        if self.loopback_conns:
+            wname = {i: n.name for i, n in enumerate(topology.workers)}
+            for c in sorted(self.loopback_conns):
+                lb_by_node.setdefault(wname[c[0]], []).append(c)
+        self.loopback_groups: List[tuple] = [
+            (("loopback", name), topology.loopback_capacity, frozenset(ms))
+            for name, ms in lb_by_node.items()]
 
         # shared-NIC groups for nodes hosting >= 2 link sources per
         # direction (sharded PS hosts, colocated PS+worker)
@@ -349,31 +432,30 @@ class TopologyBandwidthModel(BandwidthModel):
             w = worker_idx.get(name)
             if len(shards) < 2 and w is None:
                 continue   # single dedicated shard: the link group suffices
-            nic = topology.node(name).nic
+            node = topology.node(name)
             tx_links = frozenset(dl[p] for p in shards)
             rx_links = frozenset(ul[p] for p in shards)
             self.node_groups.append(
-                (("node", name, "tx"), nic, tx_links, w, "uplink"))
+                (("node", name, "tx"), node.tx, tx_links, w, "uplink"))
             self.node_groups.append(
-                (("node", name, "rx"), nic, rx_links, w, "downlink"))
+                (("node", name, "rx"), node.rx, rx_links, w, "downlink"))
 
-        # rack uplink groups: (key, capacity, member workers, member links,
-        # direction handled dynamically in shares())
+        # rack uplink groups: (key, per-direction capacities, member
+        # workers, member links; direction handled dynamically in shares())
         self.rack_groups: List[tuple] = []
+        rack_caps = topology.rack_uplink_caps()
         for rack in topology.racks:
+            if rack.name not in rack_caps:
+                continue
             member_nodes = [n for n in topology.workers + topology.ps_nodes
                             if n.rack == rack.name]
-            if not member_nodes:
-                continue
-            cap = rack.uplink_capacity
-            if cap is None:
-                cap = sum(n.nic for n in member_nodes) / rack.oversubscription
             rworkers = frozenset(worker_idx[n.name] for n in member_nodes
                                  if n.name in worker_idx)
             rlinks = frozenset(
                 ln for p in range(M) for ln in (dl[p], ul[p])
                 if topology.shard_host(p).rack == rack.name)
-            self.rack_groups.append((rack.name, cap, rworkers, rlinks))
+            self.rack_groups.append(
+                (rack.name, rack_caps[rack.name], rworkers, rlinks))
 
     def shares(self, active: Mapping[str, Set[int]]) -> Dict[Conn, float]:
         conns = [(w, r) for r, ws in active.items() for w in ws]
@@ -387,26 +469,37 @@ class TopologyBandwidthModel(BandwidthModel):
         """Caps/members over an explicit connection list.  ``shares()``
         feeds this to unweighted water-filling; the emulator's fabric pool
         reuses it with per-flow weights."""
+        if self.loopback_conns:
+            net = [c for c in conns if c not in self.loopback_conns]
+        else:
+            net = conns
         caps, members = two_level_groups(
-            conns, self.link_caps, self.worker_caps,
+            net, self.link_caps,
             default_link_cap=self.link_capacity,
-            default_worker_cap=self.worker_nic_capacity)
+            default_worker_cap=self.worker_nic_capacity,
+            worker_dir_caps=self.worker_dir_caps)
+
+        for key, cap, ms_set in self.loopback_groups:
+            ms = [c for c in conns if c in ms_set]
+            if ms:
+                caps[key] = cap
+                members[key] = ms
 
         for key, cap, links, w_host, w_dir in self.node_groups:
-            ms = [c for c in conns
+            ms = [c for c in net
                   if c[1] in links
                   or (c[0] == w_host and _direction_of(c[1]) == w_dir)]
             if ms:
                 caps[key] = cap
                 members[key] = ms
 
-        for rname, cap, rworkers, rlinks in self.rack_groups:
+        for rname, (cap_out, cap_in), rworkers, rlinks in self.rack_groups:
             # full duplex: one group per fabric direction.  A connection
             # crosses the rack iff exactly one endpoint is inside; it rides
             # the egress group if the transmitter is inside, the ingress
             # group if the receiver is.
             egress, ingress = [], []
-            for c in conns:
+            for c in net:
                 w, r = c
                 w_in = w in rworkers
                 l_in = r in rlinks
@@ -416,9 +509,9 @@ class TopologyBandwidthModel(BandwidthModel):
                 tx_in = l_in if _direction_of(r) == "downlink" else w_in
                 (egress if tx_in else ingress).append(c)
             if egress:
-                caps[("rack", rname, "egress")] = cap
+                caps[("rack", rname, "egress")] = cap_out
                 members[("rack", rname, "egress")] = egress
             if ingress:
-                caps[("rack", rname, "ingress")] = cap
+                caps[("rack", rname, "ingress")] = cap_in
                 members[("rack", rname, "ingress")] = ingress
         return caps, members

@@ -44,6 +44,7 @@ from repro.core.bandwidth import waterfill
 from repro.core.fluidlink import Flow, WeightedFluidLink
 from repro.core.overhead import RecordedOp, RecordedStep
 from repro.core.paper_models import DnnSpec, Platform
+from repro.core.syncmode import SyncSpec, make_controller, staleness_stats
 from repro.core.topology import Topology, TopologyBandwidthModel
 from repro.profiling.tracer import build_job_step
 
@@ -187,11 +188,13 @@ class ClusterEmulator:
                  num_workers: int, num_ps: int = 1, seed: int = 0,
                  flow_control: bool = True, order: str = "profiled",
                  record_profile: bool = False,
-                 topology: Optional[Topology] = None):
+                 topology: Optional[Topology] = None,
+                 sync: Optional[SyncSpec] = None):
         self.dnn = dnn
         self.batch_size = batch_size
         self.platform = platform
         self.topology = topology
+        self.sync = sync if sync is not None else SyncSpec()
         if topology is not None:
             if num_workers > topology.num_workers:
                 raise ValueError(
@@ -214,9 +217,17 @@ class ClusterEmulator:
         self.record_profile = record_profile
 
         # the ideal (noise-free) step DAG; per-step execution jitters it
+        # (mode-aware: the allreduce regime gets the collective DAG)
         self.template = build_job_step(dnn, batch_size, platform,
-                                       num_ps=num_ps, order=order, seed=seed)
+                                       num_ps=num_ps, order=order, seed=seed,
+                                       sync=self.sync,
+                                       num_workers=num_workers,
+                                       topology=topology)
         self.ops = self.template.ops
+        # step-barrier controller + staleness accounting (shared with the
+        # DES engine; async is pure bookkeeping)
+        self.sync_ctl = make_controller(self.sync, num_workers)
+        self.staleness: List[int] = []
 
         # event machinery
         self.t = 0.0
@@ -250,6 +261,10 @@ class ClusterEmulator:
         self.worker_q: List[Deque[Tuple[int, int]]] = [deque() for _ in range(num_workers)]
         self.parse_busy = [False] * num_workers        # recv/parse thread
         self.parse_q: List[Deque[Tuple[int, int, float, str]]] = [deque() for _ in range(num_workers)]
+        # per-worker collective channel (allreduce mode): the NIC-side
+        # phase engine, serialized per worker, off the compute unit
+        self.coll_busy = [False] * num_workers
+        self.coll_q: List[Deque[Tuple[int, float]]] = [deque() for _ in range(num_workers)]
         # per (worker, ps) server-side thread at PS: parse + update FIFO
         self.ps_busy: Dict[Tuple[int, int], bool] = {}
         self.ps_q: Dict[Tuple[int, int], Deque[Tuple[str, int, int, float]]] = {}
@@ -376,6 +391,13 @@ class ClusterEmulator:
         elif res == "worker":
             self.worker_q[w].append((op_idx, self.completed_steps[w]))
             self._worker_kick(w)
+        elif res == "collective":
+            # collective phase: duration compiled from the topology's
+            # water-filled lockstep rate, jittered like link service
+            dur = (op.end - op.start) * self._lognorm(
+                self.platform.noise_bandwidth)
+            self.coll_q[w].append((op_idx, dur))
+            self._coll_kick(w)
         elif res.startswith("ps"):
             p = 0 if res == "ps" else int(res.split(":")[1])
             dur = (op.end - op.start) * self._lognorm(
@@ -436,6 +458,21 @@ class ClusterEmulator:
             self.parse_busy[w] = False
             self._op_done(w, op_idx)
             self._parse_kick(w)
+
+        self._timer(dur, done)
+
+    def _coll_kick(self, w: int) -> None:
+        if self.coll_busy[w] or not self.coll_q[w]:
+            return
+        op_idx, dur = self.coll_q[w].popleft()
+        self.coll_busy[w] = True
+        if self.record_profile:
+            self.current_records[w][op_idx].start = self.t
+
+        def done():
+            self.coll_busy[w] = False
+            self._op_done(w, op_idx)
+            self._coll_kick(w)
 
         self._timer(dur, done)
 
@@ -527,6 +564,7 @@ class ClusterEmulator:
     # -------------------------------------------------------- step lifecycle
 
     def _start_step(self, w: int) -> None:
+        self.sync_ctl.on_step_start(w)
         n = len(self.ops)
         self.remaining_deps[w] = [len(op.deps) for op in self.ops]
         self.pending_ops[w] = n
@@ -550,8 +588,11 @@ class ClusterEmulator:
             self.profiled_steps.append(
                 RecordedStep(ops=list(self.current_records[w]),
                              meta=dict(self.template.meta)))
-        if self.completed_steps[w] < self.steps_target:
-            self._start_step(w)
+        lag, released = self.sync_ctl.on_step_complete(w, self.t)
+        self.staleness.append(lag)
+        for rw in released:
+            if self.completed_steps[rw] < self.steps_target:
+                self._start_step(rw)
 
     # ------------------------------------------------------------- main loop
 
@@ -592,8 +633,14 @@ class ClusterEmulator:
 
     # ------------------------------------------------------------ public API
 
-    def throughput(self, warmup_steps: int = 50) -> float:
-        """Measured examples/s (paper §4.1: average after warmup window)."""
+    def throughput(self, warmup_steps: int = 50,
+                   window: str = "common") -> float:
+        """Measured examples/s (paper §4.1: average after warmup window).
+        ``window`` follows ``Trace.throughput``: "common" (default) or
+        "all-active" (end at the earliest per-worker last completion —
+        fair under heterogeneous worker speeds)."""
+        if window not in ("common", "all-active"):
+            raise ValueError(f"unknown throughput window {window!r}")
         per_worker: Dict[int, List[float]] = {}
         for w, _s, t in self.step_completion_times:
             per_worker.setdefault(w, []).append(t)
@@ -605,11 +652,17 @@ class ClusterEmulator:
             k = warmup_steps if len(times) > warmup_steps else max(1, len(times) // 2)
             boundaries.append(times[k - 1])
             ends.append(times[-1])
-        w0, w1 = max(boundaries), max(ends)
+        w0 = max(boundaries)
+        w1 = max(ends) if window == "common" else min(ends)
         if w1 <= w0:
             return 0.0
         n = sum(1 for _w, _s, t in self.step_completion_times if w0 < t <= w1)
         return n * self.batch_size / (w1 - w0)
+
+    def staleness_stats(self) -> Dict[str, float]:
+        """mean/p50/p99/max version lag over all completed steps (the
+        counterpart of ``Trace.staleness_stats`` on the predictor side)."""
+        return staleness_stats(self.staleness)
 
 
 # ---------------------------------------------------------------------------
@@ -635,11 +688,12 @@ def measure_throughput(dnn: DnnSpec, batch_size: int, platform: Platform,
                        seed: int = 0, flow_control: bool = True,
                        order: str = "profiled",
                        warmup_steps: int = 50,
-                       topology: Optional[Topology] = None) -> float:
+                       topology: Optional[Topology] = None,
+                       sync: Optional[SyncSpec] = None) -> float:
     """Ground-truth measurement (the paper's 'real cluster' datapoint)."""
     emu = ClusterEmulator(dnn, batch_size, platform, num_workers=num_workers,
                           num_ps=num_ps, seed=seed, flow_control=flow_control,
-                          order=order, topology=topology)
+                          order=order, topology=topology, sync=sync)
     emu.run(steps_per_worker=steps)
     return emu.throughput(warmup_steps=warmup_steps)
 

@@ -34,6 +34,17 @@ Two further PS-cluster what-ifs close the paper's §6 scheduler loop:
     shard->node mappings of the topology (``repro.core.placement_search``)
     and reports the chosen placement and its predicted speedup over the
     topology's default placement.
+
+The synchronization regime is a what-if axis too (``repro.core.syncmode``):
+
+    PYTHONPATH=src python -m repro.launch.whatif --ps-cluster \
+        --dnn alexnet --batch 8 --workers 2 4 8 \
+        --sync-mode sync --backup-workers 1 --straggler-worker 2.0
+
+  * ``--sync-mode {async,sync,ssp,allreduce}`` with ``--backup-workers``
+    (sync: k-of-n barrier), ``--staleness-bound`` (ssp) and
+    ``--allreduce-algo {ring,tree}``; every non-async run also reports
+    the predicted staleness distribution (mean/p99 version lag).
 """
 from __future__ import annotations
 
@@ -110,7 +121,11 @@ def ps_cluster_main(args) -> None:
     base = PredictionRun(dnn=args.dnn, batch_size=args.batch,
                          platform=args.cluster_platform, num_ps=args.num_ps,
                          profile_steps=args.profile_steps,
-                         sim_steps=args.sim_steps).prepare()
+                         sim_steps=args.sim_steps,
+                         sync_mode=args.sync_mode,
+                         backup_workers=args.backup_workers,
+                         staleness_bound=args.staleness_bound,
+                         allreduce_algo=args.allreduce_algo).prepare()
     topo = build_whatif_topology(wmax, args.num_ps, oversub=args.oversub,
                                  racks=args.racks, ps_nic=args.ps_nic,
                                  colocate_ps=args.colocate_ps)
@@ -123,7 +138,7 @@ def ps_cluster_main(args) -> None:
         pred_strag = predict_many(base.with_topology(strag), args.workers)
     print(f"# {args.dnn} bs={args.batch} on {args.cluster_platform}: "
           f"M={args.num_ps} oversub={args.oversub} ps_nic={args.ps_nic} "
-          f"colocate={args.colocate_ps}")
+          f"colocate={args.colocate_ps} sync={args.sync_mode}")
     head = f"{'W':>3s} {'star_ex/s':>10s} {'topo_ex/s':>10s} {'ratio':>6s}"
     if pred_strag is not None:
         head += f" {'strag_ex/s':>10s} {'degrade':>7s}"
@@ -135,6 +150,15 @@ def ps_cluster_main(args) -> None:
             g = pred_strag[w]
             line += f" {g:10.2f} {g / t if t else 0:7.2f}"
         print(line)
+    if args.sync_mode != "async":
+        # staleness is the other half of a synchronization what-if: how
+        # far the regime lets gradients lag the parameters they update
+        topo_run = base.with_topology(topo)
+        for w in args.workers:
+            st = topo_run.staleness_report(w)
+            print(f"# staleness W={w}: mean={st['mean']:.2f} "
+                  f"p50={st['p50']:.0f} p99={st['p99']:.0f} "
+                  f"max={st['max']:.0f} versions={st['versions']}")
     if args.optimize_placement:
         optimize_placement_report(base, topo, wmax,
                                   strategy=args.optimize_placement)
@@ -189,6 +213,19 @@ def main() -> None:
     ap.add_argument("--straggler-worker", type=float, default=1.0,
                     help="slow worker 0's compute by this factor "
                          "(1.5 = 50%% slower; PS-cluster mode)")
+    ap.add_argument("--sync-mode", default="async",
+                    choices=["async", "sync", "ssp", "allreduce"],
+                    help="synchronization regime of the predicted job "
+                         "(PS-cluster mode; default: the paper's async)")
+    ap.add_argument("--backup-workers", type=int, default=0,
+                    help="sync mode: barrier commits after W-k gradient "
+                         "arrivals, dropping the k slowest (k-of-n barrier)")
+    ap.add_argument("--staleness-bound", type=int, default=0,
+                    help="ssp mode: max iteration lead over the slowest "
+                         "worker (0 = full sync)")
+    ap.add_argument("--allreduce-algo", default="ring",
+                    choices=["ring", "tree"],
+                    help="allreduce mode: collective algorithm")
     ap.add_argument("--optimize-placement", nargs="?", const="greedy",
                     default=None,
                     choices=["greedy", "exhaustive", "anneal"],
@@ -208,6 +245,20 @@ def main() -> None:
         if args.straggler_worker != 1.0:
             ap.error("--straggler-worker requires --ps-cluster "
                      "(TPU mode uses --straggler)")
+        if args.sync_mode != "async" or args.backup_workers \
+                or args.staleness_bound:
+            ap.error("--sync-mode/--backup-workers/--staleness-bound "
+                     "require --ps-cluster (TPU mode models all-reduce "
+                     "natively via the DCN collective ops)")
+
+    if args.backup_workers and args.sync_mode != "sync":
+        ap.error("--backup-workers only relaxes the sync-mode barrier "
+                 "(use --sync-mode sync)")
+    if args.staleness_bound and args.sync_mode != "ssp":
+        ap.error("--staleness-bound only applies to --sync-mode ssp")
+    if args.optimize_placement and args.sync_mode == "allreduce":
+        ap.error("--optimize-placement searches PS shard placements; "
+                 "the allreduce regime has no parameter servers")
 
     if args.ps_cluster:
         ps_cluster_main(args)

@@ -1,0 +1,338 @@
+"""Synchronization-semantics subsystem: barriers, SSP, collectives.
+
+The acceptance gates of the subsystem:
+
+  * ``sync_mode="async"`` is bit-identical to the frozen reference engine
+    on the golden traces (the controller is pure bookkeeping);
+  * sync-barrier throughput matches the closed-form max-of-n bound on a
+    degenerate one-op model with heterogeneous worker speeds;
+  * ssp(s=0) reproduces sync(k=n) exactly and ssp(s=inf) reproduces async
+    exactly — trace-for-trace, RNG draws and all;
+  * ring all-reduce per-worker transfer volume is 2(n-1)/n * bytes, and
+    the transformed step DAG carries no PS resources;
+  * every mode reports a staleness distribution with the right shape, and
+    the emulator's barrier semantics agree with the DES prediction.
+"""
+import random
+
+import pytest
+
+from repro.core import collectives
+from repro.core.events import Op, StepTemplate, ps_resources
+from repro.core.simulator import SimConfig, Simulation
+from repro.core.simulator_ref import ReferenceSimulation
+from repro.core.syncmode import (SyncSpec, allreduce_templates,
+                                 make_controller, staleness_stats)
+from repro.core.topology import Topology
+
+from test_engine_equivalence import assert_equivalent, make_steps
+
+BW = 1e8
+
+
+def sim_kw(seed=0, **over):
+    kw = dict(resources=ps_resources(BW), link_policy="http2", win=2.8e6,
+              steps_per_worker=20, warmup_steps=5, seed=seed,
+              record_trace=True, record_op_times=True, service_jitter=0.12,
+              stall_alpha=2e-9, stall_rtt=1e-3)
+    kw.update(over)
+    return kw
+
+
+# ---------------------------------------------------------------- validation
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="sync_mode"):
+        SyncSpec(mode="bsp")
+    with pytest.raises(ValueError, match="backup_workers"):
+        SyncSpec(mode="async", backup_workers=1)
+    with pytest.raises(ValueError, match="staleness_bound"):
+        SyncSpec(mode="sync", staleness_bound=2)
+    with pytest.raises(ValueError, match="allreduce_algo"):
+        SyncSpec(mode="allreduce", allreduce_algo="butterfly")
+    with pytest.raises(ValueError, match="quorum"):
+        make_controller(SyncSpec(mode="sync", backup_workers=3), 3)
+
+
+def test_backup_workers_validated_against_worker_count():
+    tpl = StepTemplate(ops=[Op("c", "worker", duration=0.1)])
+    cfg = SimConfig(**sim_kw(sync_mode="sync", backup_workers=2))
+    with pytest.raises(ValueError, match="quorum"):
+        Simulation(cfg).run([tpl], 2)
+
+
+# ------------------------------------------------- async golden equivalence
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+@pytest.mark.parametrize("num_ps", [1, 2])
+def test_async_mode_golden_trace(seed, num_ps):
+    """sync_mode="async" must reproduce the frozen reference engine's
+    traces exactly: the controller adds bookkeeping only."""
+    rng = random.Random(1234 + seed)
+    tpls = make_steps(rng, num_ps)
+    kw = sim_kw(seed=seed, resources=ps_resources(BW, num_ps))
+    if num_ps > 1:
+        from repro.core.bandwidth import BandwidthModel
+        kw["bandwidth_model"] = BandwidthModel()
+    new = Simulation(SimConfig(sync_mode="async", **kw)).run(tpls, 3)
+    ref = ReferenceSimulation(SimConfig(**kw)).run(tpls, 3)
+    assert_equivalent(new, ref)
+    assert new.meta["sync_mode"] == "async"
+    assert new.meta["num_versions"] == len(new.step_completions)
+
+
+# --------------------------------------------------- sync barrier semantics
+
+
+def test_sync_barrier_matches_max_of_n_bound():
+    """Degenerate 1-op model, no jitter: every synchronous step takes
+    exactly max_i(d / speed_i), the closed-form max-of-n bound."""
+    d = 0.1
+    speeds = {0: 0.5, 1: 1.0, 2: 2.0}
+    tpl = StepTemplate(ops=[Op("c", "worker", duration=d)])
+    cfg = SimConfig(**sim_kw(sync_mode="sync", service_jitter=0.0,
+                             stall_alpha=0.0, stall_rtt=0.0,
+                             worker_speed=speeds))
+    trace = Simulation(cfg).run([tpl], 3, sample=False)
+    step_time = d / min(speeds.values())
+    per_step = {}
+    for w, s, t in trace.step_completions:
+        per_step.setdefault(s, []).append(t)
+    for s, times in per_step.items():
+        # the barrier pins every worker's step s to the straggler's pace
+        assert max(times) == pytest.approx((s + 1) * step_time, rel=1e-9)
+    assert trace.meta["sim_end_time"] == pytest.approx(
+        cfg.steps_per_worker * step_time, rel=1e-9)
+    assert trace.staleness_stats()["max"] == 0
+
+
+def test_backup_workers_drop_the_straggler():
+    """With one backup worker the fast replicas commit without the
+    straggler, whose gradients arrive stale (nonzero lag)."""
+    tpl = StepTemplate(ops=[Op("c", "worker", duration=0.1)])
+    base = sim_kw(service_jitter=0.0, stall_alpha=0.0, stall_rtt=0.0,
+                  worker_speed={0: 0.25})
+    full = Simulation(SimConfig(sync_mode="sync", **base)).run(
+        [tpl], 3, sample=False)
+    backup = Simulation(SimConfig(sync_mode="sync", backup_workers=1,
+                                  **base)).run([tpl], 3, sample=False)
+    # fast workers run at their own pace instead of the straggler's
+    # (the straggler's own step budget fixes the overall makespan, so the
+    # signal is when the fast replicas finish theirs)
+    def fast_finish(trace):
+        return max(t for w, _s, t in trace.step_completions if w != 0)
+
+    assert fast_finish(backup) < fast_finish(full)
+    assert full.staleness_stats()["max"] == 0
+    assert backup.staleness_stats()["max"] >= 1
+    # no silent truncation: every worker finishes its full step budget
+    # even after the fast replicas retire and the barrier quorum shrinks
+    # (regression: stale completions must not leak the in-flight census)
+    assert len(backup.step_completions) == 3 * 20
+    per_worker = {w: 0 for w in range(3)}
+    for w, _s, _t in backup.step_completions:
+        per_worker[w] += 1
+    assert per_worker == {0: 20, 1: 20, 2: 20}
+
+
+# ----------------------------------------------------------- ssp degeneracy
+
+
+def test_ssp_zero_bound_equals_sync():
+    rng = random.Random(7)
+    tpls = make_steps(rng, 1)
+    a = Simulation(SimConfig(sync_mode="ssp", staleness_bound=0,
+                             **sim_kw())).run(tpls, 3)
+    b = Simulation(SimConfig(sync_mode="sync", **sim_kw())).run(tpls, 3)
+    # identical schedules, RNG draws and all (same release order) — but
+    # the accounting differs by design: ssp applies updates one by one
+    # (the k-th finisher of a round sees k-1 newer updates), while sync's
+    # aggregated barrier commit reports lag 0
+    assert_equivalent(a, b, rel=0.0)
+    assert max(a.staleness) <= 2   # at most W-1 within one lockstep round
+    assert max(b.staleness) == 0
+
+
+def test_ssp_unbounded_equals_async():
+    rng = random.Random(8)
+    tpls = make_steps(rng, 1)
+    a = Simulation(SimConfig(sync_mode="ssp", staleness_bound=10 ** 6,
+                             **sim_kw())).run(tpls, 3)
+    b = Simulation(SimConfig(sync_mode="async", **sim_kw())).run(tpls, 3)
+    assert_equivalent(a, b, rel=0.0)
+    assert a.staleness == b.staleness
+
+
+def test_ssp_bounds_iteration_skew():
+    """No worker's completed-iteration count may exceed the slowest by
+    more than s at any completion."""
+    s = 1
+    tpl = StepTemplate(ops=[Op("c", "worker", duration=0.1)])
+    cfg = SimConfig(**sim_kw(sync_mode="ssp", staleness_bound=s,
+                             service_jitter=0.0, stall_alpha=0.0,
+                             stall_rtt=0.0, worker_speed={0: 0.25}))
+    trace = Simulation(cfg).run([tpl], 3, sample=False)
+    completed = {0: 0, 1: 0, 2: 0}
+    for w, _seq, _t in trace.step_completions:
+        # the completing step was only allowed to start while its lead
+        # over the slowest worker was within the bound
+        assert completed[w] - min(completed.values()) <= s
+        completed[w] += 1
+
+
+# ------------------------------------------------------------- collectives
+
+
+@pytest.mark.parametrize("n", [2, 3, 4, 8, 16])
+def test_ring_volume_invariant(n):
+    nbytes = 3.7e6
+    assert collectives.ring_volume(n, nbytes) == \
+        pytest.approx(2 * (n - 1) / n * nbytes)
+    assert collectives.ring_rounds(n) == 2 * (n - 1)
+
+
+def test_ring_duration_is_volume_over_rate():
+    n, nbytes, bw = 4, 1e7, 1e8
+    dur = collectives.allreduce_duration(nbytes, n, "ring", bw)
+    assert dur == pytest.approx(collectives.ring_volume(n, nbytes) / bw)
+    # per-round latency adds rounds * rtt
+    rtt = 1e-3
+    dur_rtt = collectives.allreduce_duration(nbytes, n, "ring", bw, rtt=rtt)
+    assert dur_rtt == pytest.approx(dur + collectives.ring_rounds(n) * rtt)
+
+
+def test_tree_wins_small_messages_ring_wins_large():
+    bw, rtt, n = 1e8, 1e-3, 16
+    small = 1e4
+    large = 1e8
+    assert (collectives.allreduce_duration(small, n, "tree", bw, rtt=rtt)
+            < collectives.allreduce_duration(small, n, "ring", bw, rtt=rtt))
+    assert (collectives.allreduce_duration(large, n, "ring", bw, rtt=rtt)
+            < collectives.allreduce_duration(large, n, "tree", bw, rtt=rtt))
+
+
+def test_collective_rate_throttled_by_topology():
+    """A slow tx NIC on one ring member throttles the whole lockstep
+    ring; rack oversubscription throttles crossing flows."""
+    from repro.core.topology import Node
+    flat = Topology.star(4, 1)
+    assert collectives.ring_rate_factor(flat, 4) == pytest.approx(1.0)
+    slow = Topology(workers=(Node("w0", nic_tx=0.25), Node("w1"),
+                             Node("w2"), Node("w3")),
+                    ps_nodes=flat.ps_nodes)
+    assert collectives.ring_rate_factor(slow, 4) == pytest.approx(0.25)
+    racked = Topology.racked(4, 1, racks=2, oversubscription=8.0)
+    assert collectives.ring_rate_factor(racked, 4) < 1.0
+
+
+def test_allreduce_transform_shape():
+    """The transformed DAG has no PS resources: downlinks and parse
+    overhead vanish, each uplink becomes a collective phase, each update
+    becomes a local apply."""
+    rng = random.Random(3)
+    tpls = make_steps(rng, 1)
+    out = allreduce_templates(tpls, 4, bandwidth=BW, rtt=1e-3)
+    assert len(out) == len(tpls)
+    for src, tpl in zip(tpls, out):
+        ress = {op.res for op in tpl.ops}
+        assert not any(r.startswith(("downlink", "uplink", "ps"))
+                       for r in ress)
+        up_sizes = [op.size for op in src.ops
+                    if op.res.startswith("uplink")]
+        coll_durs = [op.duration for op in tpl.ops
+                     if op.res == "collective"]
+        assert len(coll_durs) == len(up_sizes)
+        for size, dur in zip(up_sizes, coll_durs):
+            assert dur == pytest.approx(collectives.allreduce_duration(
+                size, 4, "ring", BW, rtt=1e-3))
+            assert dur > 0
+
+
+def test_allreduce_end_to_end_beats_ps_when_bandwidth_bound():
+    """A bandwidth-bound PS job re-simulated as ring all-reduce moves
+    less data per worker and gets faster; staleness is identically 0."""
+    ops = []
+    for i in range(3):
+        ops.append(Op(f"dl{i}", "downlink", size=8e6))
+        ops.append(Op(f"fwd{i}", "worker", duration=0.002,
+                      deps=(len(ops) - 1,)))
+    for i in range(3):
+        ops.append(Op(f"ul{i}", "uplink", size=8e6, deps=(5,)))
+        ops.append(Op(f"upd{i}", "ps", duration=0.001,
+                      deps=(len(ops) - 1,)))
+    tpl = StepTemplate(ops=ops)
+    W = 4
+    kw = sim_kw(service_jitter=0.0, stall_alpha=0.0, stall_rtt=0.0)
+    ps_trace = Simulation(SimConfig(**kw)).run([tpl], W, sample=False)
+    ar_tpls = allreduce_templates([tpl], W, bandwidth=BW)
+    ar_cfg = SimConfig(sync_mode="allreduce", **kw)
+    ar_trace = Simulation(ar_cfg).run(ar_tpls, W, sample=False)
+    assert ar_trace.meta["sim_end_time"] < ps_trace.meta["sim_end_time"]
+    assert ar_trace.staleness_stats()["max"] == 0
+    assert ar_trace.meta["num_versions"] == 20   # one commit per step
+
+
+# -------------------------------------------------------------- staleness
+
+
+def test_staleness_stats_shapes():
+    assert staleness_stats([])["n"] == 0
+    st = staleness_stats([0, 0, 1, 2, 10])
+    assert st["n"] == 5 and st["max"] == 10 and st["mean"] == 2.6
+    rng = random.Random(11)
+    tpls = make_steps(rng, 1)
+    tr = Simulation(SimConfig(sync_mode="async", **sim_kw())).run(tpls, 3)
+    assert len(tr.staleness) == len(tr.step_completions)
+    assert tr.staleness_stats()["mean"] > 0   # W=3 async: real contention
+
+
+# ------------------------------------------- emulator barrier vs prediction
+
+
+class TestEmulatorAgainstPrediction:
+    """The ClusterEmulator's barrier semantics must agree with the DES
+    prediction (the PR-3 straggler-validation pattern: compare regime
+    ratios under one measurement convention)."""
+
+    def _run(self, mode, **kw):
+        from repro.core.predictor import PredictionRun
+        return PredictionRun(dnn="alexnet", batch_size=8,
+                             platform="private_cpu", profile_steps=12,
+                             sim_steps=80, sync_mode=mode, **kw)
+
+    def test_sync_ratio_matches_emulator(self):
+        base = self._run("async").prepare()
+        sync = self._run("sync")
+        sync.profile = base.profile
+        sync.overhead = base.overhead
+        sync.sim_steps_templates = base.sim_steps_templates
+        pred_ratio = (sync.predict(2, n_runs=1)
+                      / base.predict(2, n_runs=1))
+        meas_ratio = (sync.measure(2, steps=40)
+                      / base.measure(2, steps=40))
+        assert pred_ratio == pytest.approx(meas_ratio, rel=0.25)
+        # the barrier can only cost throughput
+        assert pred_ratio <= 1.05
+
+    def test_allreduce_emulator_runs_collective_dag(self):
+        from repro.core.paper_models import PAPER_DNNS, PLATFORMS
+        from repro.emulator.cluster import ClusterEmulator
+        emu = ClusterEmulator(PAPER_DNNS["alexnet"], 8,
+                              PLATFORMS["private_cpu"], num_workers=2,
+                              seed=3, sync=SyncSpec(mode="allreduce"))
+        emu.run(steps_per_worker=15)
+        assert emu.throughput(warmup_steps=5) > 0
+        assert emu.staleness_stats()["max"] == 0
+        assert any(op.res == "collective" for op in emu.ops)
+        assert not any(op.res.startswith(("downlink", "uplink", "ps"))
+                       for op in emu.ops)
+
+    def test_emulator_backup_workers_validated(self):
+        from repro.core.paper_models import PAPER_DNNS, PLATFORMS
+        from repro.emulator.cluster import ClusterEmulator
+        with pytest.raises(ValueError, match="quorum"):
+            ClusterEmulator(PAPER_DNNS["alexnet"], 8,
+                            PLATFORMS["private_cpu"], num_workers=2,
+                            sync=SyncSpec(mode="sync", backup_workers=2))

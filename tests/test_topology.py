@@ -337,3 +337,113 @@ class TestPredictionRunThreading:
         assert res["downlink"].bandwidth == 5e6
         res2 = Topology.star(2, 1).resources(default_bandwidth=1e9)
         assert res2["downlink"].bandwidth == 1e9
+
+
+class TestAsymmetricNics:
+    """Per-direction NIC capacities (Node.nic_tx / nic_rx) in the group
+    compiler: uplink conns ride the worker's tx port, downlink its rx."""
+
+    def test_defaults_to_symmetric_nic(self):
+        n = Node("w0", nic=2.0)
+        assert n.tx == 2.0 and n.rx == 2.0
+        n = Node("w0", nic=2.0, nic_tx=0.5)
+        assert n.tx == 0.5 and n.rx == 2.0
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="nic_tx"):
+            Node("w0", nic_tx=0.0)
+        with pytest.raises(ValueError, match="nic_rx"):
+            Node("w0", nic_rx=-1.0)
+
+    def test_asym_worker_port_splits_directions(self):
+        topo = Topology(workers=(Node("w0", nic_tx=0.5, nic_rx=2.0),
+                                 Node("w1")),
+                        ps_nodes=(Node("ps0", nic=4.0),))
+        sh = topo.grouped_model().shares({"uplink": {0}, "downlink": {0}})
+        assert sh[(0, "uplink")] == pytest.approx(0.5)    # tx-capped
+        assert sh[(0, "downlink")] == pytest.approx(2.0)  # rx-capped
+
+    def test_asym_ps_port_caps_links_per_direction(self):
+        # downlink = PS transmits (tx); uplink = PS receives (rx)
+        topo = Topology(workers=(Node("w0", nic=8.0), Node("w1", nic=8.0)),
+                        ps_nodes=(Node("ps0", nic_tx=0.5, nic_rx=2.0),))
+        m = topo.grouped_model()
+        sh = m.shares({"downlink": {0, 1}, "uplink": {0, 1}})
+        assert sh[(0, "downlink")] + sh[(1, "downlink")] == \
+            pytest.approx(0.5)
+        assert sh[(0, "uplink")] + sh[(1, "uplink")] == pytest.approx(2.0)
+
+    def test_asym_breaks_plain_star(self):
+        assert Topology.star(2, 1).is_plain_star()
+        t = Topology(workers=(Node("w0", nic_tx=2.0), Node("w1")),
+                     ps_nodes=(Node("ps0"),))
+        assert not t.is_plain_star()
+
+    def test_rack_caps_aggregate_per_direction(self):
+        t = Topology(
+            workers=(Node("w0", rack="r0", nic_tx=2.0, nic_rx=1.0),
+                     Node("w1", rack="r0")),
+            ps_nodes=(Node("ps0"),),
+            racks=(Rack("r0", oversubscription=2.0),))
+        caps = t.rack_uplink_caps()
+        assert caps["r0"] == (pytest.approx(1.5), pytest.approx(1.0))
+
+
+class TestLoopbackBypass:
+    """Colocated-shard localhost transfers skip the NIC groups when the
+    bypass flag is on (ROADMAP open item)."""
+
+    def _colocated(self, bypass):
+        return Topology(workers=(Node("w0"), Node("w1"), Node("w2")),
+                        placement=Placement(("w0",)),
+                        loopback_bypass=bypass)
+
+    def test_loopback_conns_only_with_flag(self):
+        assert self._colocated(False).loopback_conns() == set()
+        assert self._colocated(True).loopback_conns() == {
+            (0, "downlink"), (0, "uplink")}
+
+    def test_bypass_frees_the_host_nic(self):
+        active = {"downlink": {0, 1, 2}, "uplink": {0}}
+        sh_cons = self._colocated(False).grouped_model().shares(active)
+        sh_by = self._colocated(True).grouped_model().shares(active)
+        # loopback conns leave the shared NIC group entirely...
+        assert sh_by[(0, "downlink")] > 1.0
+        assert sh_by[(0, "uplink")] > 1.0
+        # ...and the remote workers' shares rise to the freed capacity
+        assert sh_by[(1, "downlink")] > sh_cons[(1, "downlink")]
+        assert sum(sh_by[(w, "downlink")] for w in (1, 2)) == \
+            pytest.approx(1.0)
+
+    def test_bypass_is_noop_without_colocation(self):
+        star = Topology.star(3, 1)
+        with_flag = Topology(workers=star.workers, ps_nodes=star.ps_nodes,
+                             loopback_bypass=True)
+        assert with_flag.loopback_conns() == set()
+        active = {"downlink": {0, 1, 2}}
+        assert with_flag.bandwidth_model().shares(active) == \
+            star.bandwidth_model().shares(active)
+
+    def test_bypass_improves_end_to_end_makespan(self):
+        tpl = StepTemplate(ops=[
+            Op("dl", "downlink", size=60.0),
+            Op("fwd", "worker", duration=0.05, deps=(0,)),
+            Op("ul", "uplink", size=60.0, deps=(1,)),
+            Op("upd", "ps", duration=0.01, deps=(2,)),
+        ])
+
+        def makespan(bypass):
+            topo = self._colocated(bypass)
+            cfg = SimConfig(resources=topo.resources(BW), topology=topo,
+                            steps_per_worker=40, warmup_steps=5, seed=0)
+            tr = Simulation(cfg).run([tpl], 3, sample=False)
+            return tr.meta["sim_end_time"]
+
+        # the colocated worker's transfers leave the shared NIC, so the
+        # same fixed step budget finishes sooner for everyone
+        assert makespan(True) < makespan(False)
+
+    def test_loopback_capacity_validated(self):
+        with pytest.raises(ValueError, match="loopback_capacity"):
+            Topology(workers=(Node("w0"),), placement=Placement(("w0",)),
+                     loopback_capacity=0.0)
