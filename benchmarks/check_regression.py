@@ -4,6 +4,13 @@ Compares a freshly measured ``BENCH_sim_ci.json`` (``perf_sim --fast``)
 against the committed ``BENCH_sim.json`` baseline, record by record, and
 fails on a >30% slowdown.
 
+The ``general`` section additionally carries ``incr_speedup`` — the
+engine's incremental-vs-batch waterfill ratio measured in one process, a
+machine-independent gauge of the group-local allocator.  When both files
+have the column, its section median is gated with the same threshold, so
+a regression that only hurts the incremental path (e.g. a lost memo or an
+over-eager full-solve fallback) fails even if absolute times stay fine.
+
 Two sources of noise are handled explicitly:
 
 * **Machine speed.**  The committed baseline and the CI runner are
@@ -112,6 +119,43 @@ def compare(base: dict, samples: list[dict], metric: str) -> list[dict]:
     return rows
 
 
+def incr_rows(base: dict, samples: list[dict]) -> list[dict]:
+    """General-section incremental-vs-batch speedup rows, for records
+    where the baseline and every CI sample carry ``incr_speedup`` (older
+    baselines without the column simply produce no rows)."""
+    base_recs = records(base)
+    sample_recs = [records(s) for s in samples]
+    rows = []
+    for key, brec in sorted(base_recs.items()):
+        if key[0] != "general":
+            continue
+        bval = brec.get("incr_speedup")
+        if not bval:
+            continue
+        vals = []
+        for recs in sample_recs:
+            if key in recs:
+                v = recs[key].get("incr_speedup")
+                if v is not None:
+                    vals.append(v)
+        if not vals or len(vals) < len(sample_recs):
+            continue
+        ci_val = statistics.median(vals)
+        rows.append(
+            {
+                "section": key[0],
+                "workload": key[1],
+                "W": key[2],
+                "metric": "incr_speedup",
+                "baseline": bval,
+                "ci": ci_val,
+                "samples": vals,
+                "ratio": ci_val / bval,
+            }
+        )
+    return rows
+
+
 def rerun(fast: bool, skip_ref: bool) -> dict:
     """One more in-process benchmark sample, written to a throwaway path
     so the committed baseline is never touched.  ``fast`` must match the
@@ -169,7 +213,18 @@ def main() -> None:
     def verdict_ratio(rs: list[dict]) -> float:
         return statistics.median(r["ratio"] for r in rs)
 
-    while verdict_ratio(rows) < floor and len(samples) <= args.reruns:
+    def incr_verdict(rs: list[dict]) -> float | None:
+        return statistics.median(r["ratio"] for r in rs) if rs else None
+
+    irows = incr_rows(base, samples)
+
+    def needs_rerun() -> bool:
+        if verdict_ratio(rows) < floor:
+            return True
+        iv = incr_verdict(irows)
+        return iv is not None and iv < floor
+
+    while needs_rerun() and len(samples) <= args.reruns:
         print(
             f"# sample {len(samples)} shows a >{args.threshold:.0%} median "
             f"drop; re-running the benchmark for a median verdict",
@@ -186,16 +241,26 @@ def main() -> None:
             print("# rerun shares no records with the baseline; keeping prior verdict")
             break
         rows = new_rows
+        irows = incr_rows(base, samples)
 
     median_ratio = verdict_ratio(rows)
     worst = min(rows, key=lambda r: r["ratio"])
-    failed = median_ratio < floor
+    incr_median = incr_verdict(irows)
+    incr_failed = incr_median is not None and incr_median < floor
+    failed = median_ratio < floor or incr_failed
     print(f"section,workload,W,{metric}_base,{metric}_ci,ratio")
     for r in rows:
         print(
             f"{r['section']},{r['workload']},{r['W']},"
             f"{r['baseline']:.3g},{r['ci']:.3g},{r['ratio']:.3f}"
         )
+    if irows:
+        print("section,workload,W,incr_speedup_base,incr_speedup_ci,ratio")
+        for r in irows:
+            print(
+                f"{r['section']},{r['workload']},{r['W']},"
+                f"{r['baseline']:.3g},{r['ci']:.3g},{r['ratio']:.3f}"
+            )
 
     report = {
         "baseline": args.baseline,
@@ -206,6 +271,9 @@ def main() -> None:
         "rows": rows,
         "median_ratio": median_ratio,
         "worst": worst,
+        "incr_rows": irows,
+        "incr_median_ratio": incr_median,
+        "incr_failed": incr_failed,
         "failed": failed,
     }
     os.makedirs(os.path.dirname(args.report) or ".", exist_ok=True)
@@ -213,6 +281,13 @@ def main() -> None:
         json.dump(report, f, indent=1)
     print(f"# wrote {os.path.abspath(args.report)}")
 
+    if incr_median is not None:
+        state = "REGRESSION" if incr_failed else "OK"
+        print(
+            f"# incremental-waterfill gate {state}: general-section median "
+            f"incr_speedup ratio {incr_median:.2f}x of baseline "
+            f"(floor {floor:.2f}, {len(irows)} record(s))"
+        )
     if failed:
         print(
             f"# PERF REGRESSION: median {metric} ratio {median_ratio:.2f}x "

@@ -124,7 +124,11 @@ def run(fast: bool = False, skip_ref: bool = False,
     # general bandwidth-model path: the M >= 2 water-filling fallback
     # (per-connection projections instead of uniform per-link clocks) and
     # the topology mode (rack fabric groups on top), which the equal-share
-    # numbers above never exercise
+    # numbers above never exercise.  Each record also times the engine with
+    # waterfill="batch" (the historical full re-solve per membership
+    # change): "incr_speedup" = batch_s / engine_s isolates the win of the
+    # group-local incremental allocator on the same machine, and
+    # check_regression gates the general section's median of it.
     name, layers, steps = sizes[min(1, len(sizes) - 1)]
     sp = steps // 4 if fast else steps
     tpls2 = [make_template(layers, seed=s, num_ps=2) for s in range(3)]
@@ -136,13 +140,19 @@ def run(fast: bool = False, skip_ref: bool = False,
                               bandwidth_model=topo.grouped_model())),
     )
     out["general"] = []
-    print("general,mode,W,engine_s,ref_s,speedup,events,events_per_s")
+    print("general,mode,W,engine_s,batch_s,ref_s,speedup,incr_speedup,"
+          "events,events_per_s")
     for mode, kw in general_cases:
         for w in workers:
             def cfg_fn(rep, kw=kw):
                 return make_cfg(sp, seed=rep, **kw)
             t_new, events, tput_new = time_engine(
                 Simulation, tpls2, cfg_fn, w, reps)
+
+            def cfg_fn_batch(rep, kw=kw):
+                return make_cfg(sp, seed=rep, waterfill="batch", **kw)
+            t_batch, _eb, _tb = time_engine(
+                Simulation, tpls2, cfg_fn_batch, w, reps)
             # the frozen reference engine predates the topology layer but
             # honors cfg.resources/bandwidth_model, so it remains a valid
             # baseline for speed-1.0 topologies like this one
@@ -153,14 +163,16 @@ def run(fast: bool = False, skip_ref: bool = False,
                     ReferenceSimulation, tpls2, cfg_fn, w, reps)
             rec = {"mode": mode, "workload": name, "W": w,
                    "steps_per_worker": sp, "engine_s": t_new,
-                   "ref_s": t_ref,
+                   "batch_s": t_batch, "ref_s": t_ref,
                    "speedup": (t_ref / t_new) if t_ref else None,
+                   "incr_speedup": t_batch / t_new,
                    "events": events, "events_per_s": events / t_new,
                    "throughput": tput_new, "throughput_ref": tput_ref}
             out["general"].append(rec)
-            print(f"general,{mode},{w},{t_new:.3f},"
+            print(f"general,{mode},{w},{t_new:.3f},{t_batch:.3f},"
                   f"{t_ref if t_ref is None else round(t_ref, 3)},"
                   f"{rec['speedup'] and round(rec['speedup'], 2)},"
+                  f"{rec['incr_speedup']:.2f},"
                   f"{events},{events / t_new:.0f}", flush=True)
 
     # synchronization-mode path (repro.core.syncmode): the step-barrier

@@ -2,7 +2,8 @@
 # for asynchronous-SGD throughput prediction (Li et al., ICPE'20), plus the
 # coarse baselines it compares against and the TPU adaptation layer.
 from .bandwidth import (BandwidthModel, EqualShareModel,
-                        GroupedBandwidthModel, waterfill)
+                        GroupedBandwidthModel, IncrementalWaterfill,
+                        waterfill)
 from .events import (COMPUTE, LINK, Op, ResourceSpec, StepTemplate, Trace,
                      ps_resources)
 from .overhead import (OverheadModel, RecordedOp, RecordedStep,
@@ -25,7 +26,7 @@ from .sweep import (measure_many, parallel_map, predict_many,
 
 __all__ = [
     "BandwidthModel", "EqualShareModel", "GroupedBandwidthModel",
-    "waterfill", "COMPUTE", "LINK", "Op",
+    "IncrementalWaterfill", "waterfill", "COMPUTE", "LINK", "Op",
     "ResourceSpec", "StepTemplate", "Trace", "ps_resources", "OverheadModel",
     "RecordedOp", "RecordedStep", "preprocess_profile",
     "preprocess_recorded_step", "PAPER_DNNS", "PLATFORMS", "PredictionRun",

@@ -23,10 +23,23 @@ exactly to both paper rules:
 
 Shares are expressed in multiples of the *nominal* link bandwidth B, so a
 capacity of 1.0 means "one nominal NIC" and 2.0 models a double-speed port.
+
+The solver works per **connected component** of the constraint hypergraph
+(connections coupled through shared groups), in a canonical order (sorted
+connections, sorted member lists), so that the batch solve of any subset of
+components is bit-identical to the same components' slice of a full batch
+solve.  :class:`IncrementalWaterfill` builds on that invariant: it caches
+the allocation across connection arrivals/departures and re-solves only the
+component(s) whose membership changed, staying exactly equal — float for
+float — to what ``waterfill`` would return from scratch (ratified by the
+differential harness in ``tests/test_waterfill_incremental.py`` and, when
+``REPRO_CHECK_WATERFILL=1``, cross-validated on every step).
 """
 from __future__ import annotations
 
-from typing import Dict, Mapping, Optional, Sequence, Set, Tuple
+import os
+from typing import (Callable, Dict, FrozenSet, List, Mapping, Optional,
+                    Sequence, Set, Tuple)
 
 # A connection is (worker, link_resource_name); shares are fractions of the
 # nominal link bandwidth B.
@@ -39,33 +52,20 @@ def _direction_of(res_name: str) -> str:
     return res_name.split(":")[0]  # 'downlink' / 'uplink' (index stripped)
 
 
-def waterfill(conns: Sequence[Conn],
-              caps: Mapping[object, float],
-              members: Mapping[object, Sequence[Conn]],
-              weights: Optional[Mapping[Conn, float]] = None,
-              ) -> Dict[Conn, float]:
-    """Max-min progressive filling over arbitrary capacity groups.
-
-    ``caps[k]`` bounds the total share of ``members[k]``; every connection
-    should belong to at least one group (an unconstrained connection would
-    absorb the whole raise loop).  With ``weights``, shares rise in
-    proportion to each connection's weight (weighted max-min); without, the
-    arithmetic is identical to the historical two-level implementation.
+def _fill(conns: Sequence[Conn],
+          caps: Mapping[object, float],
+          members: Mapping[object, Sequence[Conn]],
+          weights: Optional[Mapping[Conn, float]],
+          ) -> Dict[Conn, float]:
+    """Progressive filling over ONE connected component.
 
     Raise unfrozen conns until some group saturates; freeze its members;
     repeat — at most ``len(caps)`` rounds since each round freezes a group.
+    The arithmetic is the historical global loop applied to a component;
+    callers must pass canonical inputs (sorted conns, sorted member lists)
+    so that repeated solves of the same component are bit-identical.
     """
     share: Dict[Conn, float] = {c: 0.0 for c in conns}
-    covered: Set[Conn] = set()
-    for ms in members.values():
-        covered.update(ms)
-    for c in conns:
-        if c not in covered:
-            # an unconstrained connection would absorb the whole raise
-            # loop and come back with a meaningless share — fail loudly
-            raise ValueError(
-                f"connection {c!r} belongs to no capacity group; every "
-                f"connection needs at least one (its link's, typically)")
     frozen: Set[Conn] = set()
     remaining_cap = dict(caps)
     for _ in range(len(caps) + 1):
@@ -105,42 +105,78 @@ def waterfill(conns: Sequence[Conn],
     return share
 
 
-def two_level_groups(conns: Sequence[Conn],
-                     link_caps: Optional[Mapping[str, float]] = None,
-                     worker_caps: Optional[Mapping[int, float]] = None,
-                     default_link_cap: float = 1.0,
-                     default_worker_cap: float = 1.0,
-                     worker_dir_caps: Optional[Mapping[Tuple[int, str],
-                                                       float]] = None,
-                     ) -> Tuple[Dict[object, float], Dict[object, list]]:
-    """The paper's two-level group structure over a connection list: one
-    group per link resource, one per (worker, direction) NIC.  Every
-    grouped model starts from this and layers extra groups on top.
+def _components(conns: Sequence[Conn],
+                members: Mapping[object, Sequence[Conn]],
+                ) -> List[Tuple[Set[Conn], List[object]]]:
+    """Partition connections into connected components of the constraint
+    hypergraph: two connections are coupled iff some group contains both
+    (directly or transitively).  Returns ``(component_conns, group_keys)``
+    pairs; the allocation of one component is independent of the others."""
+    gof: Dict[Conn, List[object]] = {}
+    for key, ms in members.items():
+        for c in ms:
+            gof.setdefault(c, []).append(key)
+    comps: List[Tuple[Set[Conn], List[object]]] = []
+    visited: Set[Conn] = set()
+    for c0 in conns:
+        if c0 in visited:
+            continue
+        visited.add(c0)
+        comp = {c0}
+        keys: List[object] = []
+        seen_keys: Set[object] = set()
+        stack = [c0]
+        while stack:
+            c = stack.pop()
+            for key in gof.get(c, ()):
+                if key in seen_keys:
+                    continue
+                seen_keys.add(key)
+                keys.append(key)
+                for m in members[key]:
+                    if m not in visited:
+                        visited.add(m)
+                        comp.add(m)
+                        stack.append(m)
+        comps.append((comp, keys))
+    return comps
 
-    ``worker_dir_caps`` maps (worker, 'uplink'|'downlink') to a
-    per-direction NIC capacity (asymmetric tx/rx ports) and wins over the
-    symmetric ``worker_caps`` entry for that worker."""
-    link_members: Dict[str, list] = {}
-    nic_members: Dict[Tuple[int, str], list] = {}
+
+def waterfill(conns: Sequence[Conn],
+              caps: Mapping[object, float],
+              members: Mapping[object, Sequence[Conn]],
+              weights: Optional[Mapping[Conn, float]] = None,
+              ) -> Dict[Conn, float]:
+    """Max-min progressive filling over arbitrary capacity groups.
+
+    ``caps[k]`` bounds the total share of ``members[k]``; every connection
+    should belong to at least one group (an unconstrained connection would
+    absorb the whole raise loop).  With ``weights``, shares rise in
+    proportion to each connection's weight (weighted max-min).
+
+    The problem decomposes over connected components of the constraint
+    hypergraph and each component is solved in canonical order (sorted
+    connections / member lists), which makes the output independent of the
+    caller's connection ordering and bit-identical to
+    :class:`IncrementalWaterfill`'s cached allocation of the same state.
+    """
+    covered: Set[Conn] = set()
+    for ms in members.values():
+        covered.update(ms)
     for c in conns:
-        w, r = c
-        link_members.setdefault(r, []).append(c)
-        nic_members.setdefault((w, _direction_of(r)), []).append(c)
-
-    caps: Dict[object, float] = {}
-    members: Dict[object, list] = {}
-    for r, ms in link_members.items():
-        caps[("link", r)] = (link_caps or {}).get(r, default_link_cap)
-        members[("link", r)] = ms
-    for k, ms in nic_members.items():
-        cap = None
-        if worker_dir_caps is not None:
-            cap = worker_dir_caps.get(k)
-        if cap is None:
-            cap = (worker_caps or {}).get(k[0], default_worker_cap)
-        caps[("nic",) + k] = cap
-        members[("nic",) + k] = ms
-    return caps, members
+        if c not in covered:
+            # an unconstrained connection would absorb the whole raise
+            # loop and come back with a meaningless share — fail loudly
+            raise ValueError(
+                f"connection {c!r} belongs to no capacity group; every "
+                f"connection needs at least one (its link's, typically)")
+    share: Dict[Conn, float] = {}
+    for comp, keys in _components(conns, members):
+        comp_conns = sorted(comp)
+        comp_caps = {k: caps[k] for k in keys}
+        comp_members = {k: sorted(set(members[k])) for k in keys}
+        share.update(_fill(comp_conns, comp_caps, comp_members, weights))
+    return share
 
 
 class BandwidthModel:
@@ -150,12 +186,42 @@ class BandwidthModel:
     paper-§5-faithful model for flat multi-PS clusters.  Heterogeneous or
     nested constraints use :class:`GroupedBandwidthModel` (explicit group
     data) or ``topology.TopologyBandwidthModel`` (compiled from a cluster
-    graph)."""
+    graph).
+
+    Group structure is defined per connection by :meth:`conn_groups` —
+    the contract :class:`IncrementalWaterfill` builds on — and the batch
+    ``groups_for``/``shares`` are derived from it, so the incremental and
+    batch solvers always see identical groups."""
 
     def __init__(self, worker_nic_capacity: float = 1.0,
                  link_capacity: float = 1.0):
         self.worker_nic_capacity = worker_nic_capacity
         self.link_capacity = link_capacity
+
+    def conn_groups(self, conn: Conn) -> Tuple[Tuple[object, float], ...]:
+        """The capacity groups one connection belongs to, as ``(key,
+        capacity)`` pairs.  Membership must depend only on the connection
+        identity — never on which other connections are active — so the
+        incremental solver can maintain group state across arrivals."""
+        w, r = conn
+        return ((("link", r), self.link_capacity),
+                (("nic", w, _direction_of(r)), self.worker_nic_capacity))
+
+    def groups_for(self, conns: Sequence[Conn]
+                   ) -> Tuple[Dict[object, float], Dict[object, list]]:
+        """Caps/members over an explicit connection list, aggregated from
+        :meth:`conn_groups` (one source of truth for both solvers)."""
+        caps: Dict[object, float] = {}
+        members: Dict[object, list] = {}
+        for c in conns:
+            for key, cap in self.conn_groups(c):
+                ms = members.get(key)
+                if ms is None:
+                    caps[key] = cap
+                    members[key] = [c]
+                else:
+                    ms.append(c)
+        return caps, members
 
     def shares(self, active: Mapping[str, Set[int]]) -> Dict[Conn, float]:
         """``active`` maps link resource name -> set of active workers.
@@ -165,9 +231,7 @@ class BandwidthModel:
         conns = [(w, r) for r, ws in active.items() for w in ws]
         if not conns:
             return {}
-        caps, members = two_level_groups(
-            conns, default_link_cap=self.link_capacity,
-            default_worker_cap=self.worker_nic_capacity)
+        caps, members = self.groups_for(conns)
         return waterfill(conns, caps, members)
 
 
@@ -191,21 +255,15 @@ class GroupedBandwidthModel(BandwidthModel):
         self.worker_caps = dict(worker_caps or {})
         self.extra_groups = tuple(extra_groups)
 
-    def shares(self, active: Mapping[str, Set[int]]) -> Dict[Conn, float]:
-        conns = [(w, r) for r, ws in active.items() for w in ws]
-        if not conns:
-            return {}
-        caps, members = two_level_groups(
-            conns, self.link_caps, self.worker_caps,
-            default_link_cap=self.link_capacity,
-            default_worker_cap=self.worker_nic_capacity)
+    def conn_groups(self, conn: Conn) -> Tuple[Tuple[object, float], ...]:
+        w, r = conn
+        out = [(("link", r), self.link_caps.get(r, self.link_capacity)),
+               (("nic", w, _direction_of(r)),
+                self.worker_caps.get(w, self.worker_nic_capacity))]
         for key, cap, group_members in self.extra_groups:
-            ms = [c for c in conns
-                  if c in group_members or c[1] in group_members]
-            if ms:
-                caps[("grp", key)] = cap
-                members[("grp", key)] = ms
-        return waterfill(conns, caps, members)
+            if conn in group_members or r in group_members:
+                out.append((("grp", key), cap))
+        return tuple(out)
 
 
 class EqualShareModel(BandwidthModel):
@@ -213,6 +271,12 @@ class EqualShareModel(BandwidthModel):
     ignoring NIC coupling entirely. Kept as the paper-faithful default for
     1-PS simulations (identical results to water-filling there, but cheaper
     and exactly the published rule)."""
+
+    def conn_groups(self, conn: Conn) -> Tuple[Tuple[object, float], ...]:
+        # link-only groups: water-filling over them is the equal split
+        # (the simulator's uniform path never takes this route, but the
+        # contract holds for completeness)
+        return ((("link", conn[1]), self.link_capacity),)
 
     def shares(self, active: Mapping[str, Set[int]]) -> Dict[Conn, float]:
         out: Dict[Conn, float] = {}
@@ -223,3 +287,290 @@ class EqualShareModel(BandwidthModel):
             for w in ws:
                 out[(w, r)] = s
         return out
+
+
+class IncrementalWaterfill:
+    """Incremental max-min water-filling over a static group structure.
+
+    Maintains the :func:`waterfill` allocation across connection arrivals
+    and departures: per-group residual membership, flow->group mappings and
+    the connected-component partition are kept up to date, and a
+    :meth:`flush` re-solves only the component(s) whose membership changed
+    since the last flush — every other connection keeps its cached share
+    untouched.  When the dirty closure exceeds ``FULL_FRACTION`` of the
+    active set, the solver falls back to a full re-solve (identical result;
+    the fallback is purely an O(...) escape hatch, since solving all
+    components is the same code as solving one).
+
+    **Bit-identity contract:** after any add/remove/flush sequence,
+    ``self.shares`` equals ``waterfill(active, caps, members)`` float for
+    float.  Both sides run the same canonical per-component ``_fill`` on
+    the same inputs — group caps come from one ``conn_groups`` callable,
+    member lists are sorted, and an untouched component's cached solve is
+    exactly what a fresh batch solve of that component computes.  The
+    differential harness (``tests/test_waterfill_incremental.py``) ratifies
+    this on randomized sequences; setting ``REPRO_CHECK_WATERFILL=1`` (or
+    ``check=True``) cross-validates every flush against the batch solver
+    and raises on the first divergence.
+
+    Unweighted re-solves are additionally memoized per affected membership
+    set (frozenset key -> partition + solved shares): DES steady state
+    toggles through a small set of recurring active sets, so most flushes
+    become dict lookups.
+
+    ``conn_groups(conn)`` must return the ``(key, capacity)`` pairs of the
+    connection's groups, independent of the rest of the active set —
+    exactly :meth:`BandwidthModel.conn_groups`.
+    """
+
+    FULL_FRACTION = 0.75   # dirty closure above this fraction => full solve
+    MEMO_MAX = 4096        # unweighted component-solve memo bound
+
+    def __init__(self,
+                 conn_groups: Callable[[Conn],
+                                       Sequence[Tuple[object, float]]],
+                 weighted: bool = False,
+                 check: Optional[bool] = None):
+        self._conn_groups_fn = conn_groups
+        self._weighted = weighted
+        if check is None:
+            check = bool(os.environ.get("REPRO_CHECK_WATERFILL"))
+        self._check = check
+        self._active: Dict[Conn, float] = {}          # conn -> weight
+        # per-ACTIVE-conn group keys and per-LIVE-group caps/members; all
+        # three are evicted as connections depart, so memory is bounded by
+        # the active set even under never-reused connections (the
+        # emulator's Poisson background flows)
+        self._groups_of: Dict[Conn, tuple] = {}       # conn -> group keys
+        self._caps: Dict[object, float] = {}
+        self._members: Dict[object, Set[Conn]] = {}   # active members only
+        self._comp_of: Dict[Conn, int] = {}
+        self._comps: Dict[int, Set[Conn]] = {}
+        self._next_cid = 0
+        self._dirty: Set[Conn] = set()
+        # affected-set -> [(component, solved shares)] (unweighted only)
+        self._memo: Dict[FrozenSet[Conn], list] = {}
+        # component -> solved shares (unweighted; hit when the same
+        # component recurs inside different affected sets)
+        self._comp_memo: Dict[FrozenSet[Conn], Dict[Conn, float]] = {}
+        self.shares: Dict[Conn, float] = {}
+        self.stats = {"flushes": 0, "full_solves": 0, "comp_solves": 0,
+                      "memo_hits": 0, "resolved_conns": 0,
+                      "active_conn_events": 0}
+
+    # ------------------------------------------------------------ mutation
+
+    @property
+    def pending(self) -> bool:
+        """True when membership changed since the last :meth:`flush`."""
+        return bool(self._dirty)
+
+    def add(self, conn: Conn, weight: float = 1.0) -> None:
+        """Register an arriving connection (effective at the next flush)."""
+        if conn in self._active:
+            raise ValueError(f"connection {conn!r} is already active")
+        pairs = tuple(self._conn_groups_fn(conn))
+        if not pairs:
+            raise ValueError(
+                f"connection {conn!r} belongs to no capacity group; "
+                f"every connection needs at least one (its link's, "
+                f"typically)")
+        self._groups_of[conn] = tuple(k for k, _cap in pairs)
+        self._active[conn] = weight
+        for k, cap in pairs:
+            ms = self._members.get(k)
+            if ms is None:
+                self._members[k] = {conn}
+                self._caps[k] = cap
+            else:
+                old = self._caps[k]
+                if old != cap:
+                    raise ValueError(
+                        f"group {k!r} capacity disagrees across "
+                        f"connections ({old} vs {cap}); conn_groups must "
+                        f"be static")
+                ms.add(conn)
+        self._dirty.add(conn)
+
+    def remove(self, conn: Conn) -> None:
+        """Register a departing connection (effective at the next flush)."""
+        del self._active[conn]   # KeyError on unknown conns, deliberately
+        for k in self._groups_of.pop(conn):
+            ms = self._members.get(k)
+            if ms is not None:
+                ms.discard(conn)
+                if not ms:
+                    del self._members[k]
+                    del self._caps[k]
+        self._dirty.add(conn)
+
+    # ------------------------------------------------------------- solving
+
+    def flush(self) -> Set[Conn]:
+        """Apply pending arrivals/departures and re-solve what they touch.
+
+        Returns the set of connections whose share changed (including the
+        newly added ones); everything else keeps its cached share AND its
+        cached float value — callers can skip re-projecting those.
+        """
+        if not self._dirty:
+            return set()
+        dirty, self._dirty = self._dirty, set()
+        self.stats["flushes"] += 1
+        active = self._active
+        comp_of = self._comp_of
+        comps_tbl = self._comps
+        # affected region = the old component of every dirty conn (covers
+        # departures and splits) + the components an arrival's groups reach
+        # (covers merges) + the arrivals themselves.  Edges only appear or
+        # vanish at dirty conns, so this union is always a union of whole
+        # components of the NEW membership state — re-solving it in
+        # isolation is bit-identical to its slice of a full batch solve.
+        cids: Set[int] = set()
+        fresh: Set[Conn] = set()
+        for c in dirty:
+            cid = comp_of.get(c)
+            if cid is not None:
+                cids.add(cid)
+            if c in active:
+                fresh.add(c)
+                for k in self._groups_of[c]:
+                    for m in self._members[k]:
+                        mcid = comp_of.get(m)
+                        if mcid is not None:
+                            cids.add(mcid)
+                        else:
+                            fresh.add(m)
+        affected = fresh
+        for cid in cids:
+            affected |= comps_tbl[cid]
+        affected = {c for c in affected if c in active}
+        if active and len(affected) > self.FULL_FRACTION * len(active):
+            self.stats["full_solves"] += 1
+            affected = set(active)
+        self.stats["resolved_conns"] += len(affected)
+        self.stats["active_conn_events"] += len(active)
+        # partition the affected region and solve each component; both the
+        # partition and the solved shares recur in steady state, so the
+        # whole step is memoized per affected membership set (unweighted)
+        solved = None
+        akey: Optional[FrozenSet[Conn]] = None
+        if not self._weighted:
+            akey = frozenset(affected)
+            solved = self._memo.get(akey)
+        if solved is None:
+            solved = [(comp, self._solve(comp))
+                      for comp in self._split(affected)]
+            if akey is not None:
+                if len(self._memo) >= self.MEMO_MAX:
+                    self._memo.clear()   # simple bound; recurring sets refill
+                self._memo[akey] = solved
+        else:
+            self.stats["memo_hits"] += 1
+        # retire every stale component record touching the affected set
+        for c in affected | dirty:
+            cid = comp_of.pop(c, None)
+            if cid is not None:
+                stale = comps_tbl.pop(cid, None)
+                if stale:
+                    for m in stale:
+                        comp_of.pop(m, None)
+        changed: Set[Conn] = set()
+        shares = self.shares
+        for comp, comp_shares in solved:
+            cid = self._next_cid
+            self._next_cid += 1
+            comps_tbl[cid] = comp
+            for m in comp:
+                comp_of[m] = cid
+            for m, s in comp_shares.items():
+                old = shares.get(m)
+                if old is None or old != s:
+                    changed.add(m)
+                    shares[m] = s
+        for c in dirty:
+            if c not in active:
+                shares.pop(c, None)
+        if self._check:
+            self._verify()
+        return changed
+
+    def _split(self, affected: Set[Conn]) -> List[FrozenSet[Conn]]:
+        """Connected components of the affected region under the current
+        membership state.  Every group is expanded at most once —
+        components are disjoint, so a group seen from one member never
+        needs re-scanning from another."""
+        comps: List[FrozenSet[Conn]] = []
+        visited: Set[Conn] = set()
+        seen_keys: Set[object] = set()
+        for c0 in affected:
+            if c0 in visited:
+                continue
+            visited.add(c0)
+            comp = {c0}
+            stack = [c0]
+            while stack:
+                c = stack.pop()
+                for k in self._groups_of[c]:
+                    if k in seen_keys:
+                        continue
+                    seen_keys.add(k)
+                    for m in self._members[k]:
+                        if m not in visited:
+                            visited.add(m)
+                            comp.add(m)
+                            stack.append(m)
+            comps.append(frozenset(comp))
+        return comps
+
+    def _group_data(self, conns: Sequence[Conn]
+                    ) -> Tuple[Dict[object, float], Dict[object, list]]:
+        """Caps/members over (sorted) active conns from the maintained
+        structures — the single aggregation both the component solve and
+        the invariant check consume, mirroring the canonical form
+        ``BandwidthModel.groups_for`` feeds the batch solver."""
+        caps: Dict[object, float] = {}
+        members: Dict[object, list] = {}
+        for c in conns:
+            for k in self._groups_of[c]:
+                ms = members.get(k)
+                if ms is None:
+                    caps[k] = self._caps[k]
+                    members[k] = [c]
+                else:
+                    ms.append(c)
+        return caps, members
+
+    def _solve(self, comp: FrozenSet[Conn]) -> Dict[Conn, float]:
+        """Canonical solve of one component (the batch solver's own
+        ``_fill`` on sorted conns / sorted member lists)."""
+        if not self._weighted:
+            hit = self._comp_memo.get(comp)
+            if hit is not None:
+                self.stats["memo_hits"] += 1
+                return hit
+        self.stats["comp_solves"] += 1
+        conns = sorted(comp)
+        caps, members = self._group_data(conns)
+        weights = ({c: self._active[c] for c in conns}
+                   if self._weighted else None)
+        out = _fill(conns, caps, members, weights)
+        if not self._weighted:
+            if len(self._comp_memo) >= self.MEMO_MAX:
+                self._comp_memo.clear()
+            self._comp_memo[comp] = out
+        return out
+
+    def _verify(self) -> None:
+        """Invariant mode: cross-validate the cache against a from-scratch
+        batch solve (exact float equality) — REPRO_CHECK_WATERFILL=1."""
+        conns = sorted(self._active)
+        caps, members = self._group_data(conns)
+        weights = ({c: self._active[c] for c in conns}
+                   if self._weighted else None)
+        ref = waterfill(conns, caps, members, weights=weights)
+        if ref != self.shares:
+            diffs = sorted(set(ref.items()) ^ set(self.shares.items()))
+            raise AssertionError(
+                f"incremental waterfill diverged from the batch solve on "
+                f"{len(diffs)} entr(ies); first few: {diffs[:6]}")

@@ -24,6 +24,14 @@ and parallel evaluation are bit-identical — and scores are memoized per
 placement, so the greedy construction, the swap search, and the
 exhaustive oracle share work instead of re-simulating.
 
+Candidate evaluation runs the simulator's general (topology) path, whose
+bandwidth re-solves are group-local by default (``SimConfig.waterfill=
+"auto"`` -> ``bandwidth.IncrementalWaterfill``): scoring hundreds of
+near-identical placements issues component-sized re-solves instead of
+full re-waterfills.  Pass ``waterfill="batch"`` through
+``evaluator_from_templates(...)``/``PredictionRun`` to pin the historical
+batch solver (the differential baseline; identical shares either way).
+
 The searched-over baseline (the topology's own default placement, i.e.
 the paper's star convention of shard ``p`` on ``ps_nodes[p]``) is always
 scored too, and the returned placement is never worse than it.

@@ -64,6 +64,10 @@ class PredictionRun:
     backup_workers: int = 0
     staleness_bound: int = 0
     allreduce_algo: str = "ring"
+    # General-path bandwidth re-solve strategy (SimConfig.waterfill):
+    # "auto" = group-local incremental solves (bit-identical shares),
+    # "batch" = the historical full re-waterfill per membership change.
+    waterfill: str = "auto"
 
     # filled by prepare()
     profile: List[RecordedStep] = field(default_factory=list)
@@ -151,6 +155,7 @@ class PredictionRun:
             backup_workers=self.backup_workers,
             staleness_bound=self.staleness_bound,
             allreduce_algo=self.allreduce_algo,
+            waterfill=self.waterfill,
         )
 
     def templates_for(self, num_workers: int) -> list:

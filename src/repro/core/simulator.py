@@ -40,7 +40,7 @@ import random
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
-from .bandwidth import BandwidthModel, EqualShareModel
+from .bandwidth import BandwidthModel, EqualShareModel, IncrementalWaterfill
 from .events import (COMPUTE, LINK, Chunk, LiveOp, ResourceSpec,
                      StepTemplate, Trace)
 from .fluidlink import EqualShareLink
@@ -118,6 +118,14 @@ class SimConfig:
     backup_workers: int = 0
     staleness_bound: int = 0
     allreduce_algo: str = "ring"
+    # General-path (M >= 2 / topology) bandwidth re-solve strategy:
+    # "auto" uses the incremental group-local solver whenever the model
+    # exposes its group structure (all built-in grouped models do) and is
+    # bit-identical in shares to "batch", which re-waterfills the whole
+    # active set on every membership change (the pre-incremental engine
+    # behavior, kept as the differential baseline and escape hatch).
+    # "incremental" insists and errors if the model cannot support it.
+    waterfill: str = "auto"
 
     def sync_spec(self) -> SyncSpec:
         return SyncSpec(mode=self.sync_mode,
@@ -159,6 +167,10 @@ class SimConfig:
             raise ValueError(
                 f"unknown link_policy {self.link_policy!r} "
                 f"(expected one of {_LINK_POLICIES})")
+        if self.waterfill not in ("auto", "incremental", "batch"):
+            raise ValueError(
+                f"unknown waterfill mode {self.waterfill!r} "
+                f"(expected 'auto', 'incremental' or 'batch')")
         if self.win <= 0:
             raise ValueError(
                 f"HTTP/2 flow-control window must be > 0 bytes, got "
@@ -228,6 +240,21 @@ class Simulation:
         # other model may split a link unevenly (NIC coupling) and uses the
         # per-connection fallback.
         uniform = type(cfg.bandwidth_model) is EqualShareModel
+        # Group-local incremental re-solves for the general path: only the
+        # component(s) whose membership changed are re-waterfilled and only
+        # connections whose share actually changed are re-projected.  Needs
+        # the model's group structure (conn_groups); a custom shares()
+        # override falls back to the batch path.
+        incr = (not uniform and cfg.waterfill != "batch"
+                and type(cfg.bandwidth_model).shares is BandwidthModel.shares)
+        if cfg.waterfill == "incremental" and not incr:
+            raise ValueError(
+                "waterfill='incremental' needs a grouped bandwidth model: "
+                "the uniform equal-share path (1-PS star) never builds a "
+                "solver, and a custom shares() override exposes no group "
+                "structure; use waterfill='auto' or 'batch'")
+        iwf = (IncrementalWaterfill(cfg.bandwidth_model.conn_groups)
+               if incr else None)
 
         workers = range(num_workers)
         scheds: Dict[Tuple[int, str], Scheduler] = {}
@@ -273,7 +300,14 @@ class Simulation:
         conn_rate: Dict[Tuple[int, str], float] = {}
         conn_mtime: Dict[Tuple[int, str], float] = {}
         conn_epoch: Dict[Tuple[int, str], int] = {}
-        cur_shares: Dict[Tuple[int, str], float] = {}
+        # incremental mode reads shares straight off the solver's cache;
+        # batch mode rebuilds this dict on every recompute
+        cur_shares: Dict[Tuple[int, str], float] = \
+            iwf.shares if iwf is not None else {}
+        # incremental mode: conns begun this batch without a trusted rate
+        # (their projection is issued at finalize even if the share the
+        # solver lands on is numerically unchanged)
+        needs_proj: Set[Tuple[int, str]] = set()
 
         pending_ops: Dict[int, int] = {w: 0 for w in workers}
         completed: Dict[int, int] = {w: 0 for w in workers}
@@ -361,10 +395,16 @@ class Simulation:
                                  _K_CONN, key, epoch))
                         else:
                             shares_dirty = True
+                            if iwf is not None:
+                                needs_proj.add(key)
                     else:
                         # real rate assigned by the end-of-batch recompute
                         conn_rate[key] = 0.0
                         shares_dirty = True
+                        if iwf is not None:
+                            if not was_active:
+                                iwf.add(key)
+                            needs_proj.add(key)
             else:
                 chunk.seq = next(start_seq)
                 running[key] = chunk
@@ -421,6 +461,37 @@ class Simulation:
                              _K_LINK, rname, link.epoch))
                 dirty_links.clear()
             elif shares_dirty:
+                if iwf is not None:
+                    # group-local re-solve: only components touched by the
+                    # batch's joins/leaves are recomputed, and only conns
+                    # whose share (or service state) changed re-project —
+                    # untouched conns keep epoch, rate and calendar entry
+                    touched = iwf.flush()
+                    if needs_proj:
+                        touched |= needs_proj
+                        needs_proj.clear()
+                    for key in touched:
+                        chunk = running.get(key)
+                        if chunk is None:
+                            continue      # departed within this batch
+                        rname = key[1]
+                        r_old = conn_rate.get(key, 0.0)
+                        if r_old > 0.0:
+                            chunk.remaining -= r_old * (t - conn_mtime[key])
+                        conn_mtime[key] = t
+                        r_new = cur_shares.get(key, 0.0) \
+                            * links[rname].bandwidth
+                        conn_rate[key] = r_new
+                        epoch = conn_epoch.get(key, 0) + 1
+                        conn_epoch[key] = epoch
+                        if r_new > 0.0:
+                            rem = chunk.remaining
+                            heapq.heappush(
+                                calendar,
+                                (t + (rem if rem > 0.0 else 0.0) / r_new,
+                                 next(cal_seq), _K_CONN, key, epoch))
+                    shares_dirty = False
+                    return
                 cur_shares.clear()
                 cur_shares.update(cfg.bandwidth_model.shares(
                     {r: l.active for r, l in links.items() if l.active}))
@@ -582,6 +653,8 @@ class Simulation:
                             dirty_links.add(rname)
                         else:
                             shares_dirty = True
+                            if iwf is not None:
+                                iwf.remove(key)
 
                 # step complete?  (pending_ops == 0 implies the worker's
                 # schedulers are empty and nothing of its is running: every
@@ -607,6 +680,10 @@ class Simulation:
             "num_versions": sync_ctl.version,
             "barrier_commits": list(sync_ctl.commits),
         }
+        if iwf is not None:
+            # solver work profile: lets tests assert that candidate
+            # evaluation issues only group-local re-solves
+            trace.meta["waterfill"] = dict(iwf.stats)  # type: ignore[attr-defined]
         if cfg.record_op_times:
             trace.op_times = op_times  # type: ignore[attr-defined]
         return trace

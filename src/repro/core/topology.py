@@ -46,10 +46,9 @@ multiples of the nominal NIC instead.
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
-from typing import Dict, List, Mapping, Optional, Sequence, Set, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
-from .bandwidth import (BandwidthModel, Conn, EqualShareModel, _direction_of,
-                        two_level_groups, waterfill)
+from .bandwidth import BandwidthModel, Conn, EqualShareModel, _direction_of
 from .events import ResourceSpec, ps_resources
 
 __all__ = ["Node", "Rack", "Placement", "Topology", "TopologyBandwidthModel"]
@@ -418,6 +417,11 @@ class TopologyBandwidthModel(BandwidthModel):
         self.loopback_groups: List[tuple] = [
             (("loopback", name), topology.loopback_capacity, frozenset(ms))
             for name, ms in lb_by_node.items()]
+        # conn -> its node's loopback (key, cap), for conn_groups()
+        self._loopback_of: Dict[Conn, tuple] = {}
+        for key, cap, ms in self.loopback_groups:
+            for c in ms:
+                self._loopback_of[c] = (key, cap)
 
         # shared-NIC groups for nodes hosting >= 2 link sources per
         # direction (sharded PS hosts, colocated PS+worker)
@@ -457,61 +461,40 @@ class TopologyBandwidthModel(BandwidthModel):
             self.rack_groups.append(
                 (rack.name, rack_caps[rack.name], rworkers, rlinks))
 
-    def shares(self, active: Mapping[str, Set[int]]) -> Dict[Conn, float]:
-        conns = [(w, r) for r, ws in active.items() for w in ws]
-        if not conns:
-            return {}
-        caps, members = self.groups_for(conns)
-        return waterfill(conns, caps, members)
-
-    def groups_for(self, conns: Sequence[Conn]
-                   ) -> Tuple[Dict[object, float], Dict[object, list]]:
-        """Caps/members over an explicit connection list.  ``shares()``
-        feeds this to unweighted water-filling; the emulator's fabric pool
-        reuses it with per-flow weights."""
-        if self.loopback_conns:
-            net = [c for c in conns if c not in self.loopback_conns]
-        else:
-            net = conns
-        caps, members = two_level_groups(
-            net, self.link_caps,
-            default_link_cap=self.link_capacity,
-            default_worker_cap=self.worker_nic_capacity,
-            worker_dir_caps=self.worker_dir_caps)
-
-        for key, cap, ms_set in self.loopback_groups:
-            ms = [c for c in conns if c in ms_set]
-            if ms:
-                caps[key] = cap
-                members[key] = ms
-
-        for key, cap, links, w_host, w_dir in self.node_groups:
-            ms = [c for c in net
-                  if c[1] in links
-                  or (c[0] == w_host and _direction_of(c[1]) == w_dir)]
-            if ms:
-                caps[key] = cap
-                members[key] = ms
-
+    def conn_groups(self, conn: Conn) -> Tuple[Tuple[object, float], ...]:
+        """All groups one connection rides, as ``(key, capacity)`` pairs —
+        membership depends only on the connection identity, so the batch
+        ``groups_for``/``shares`` (inherited, aggregated from here) and the
+        incremental solver see identical structure.  Loopback-bypass
+        connections skip every NIC/rack group and ride their host node's
+        loopback group alone; unknown (pseudo-)workers — the emulator's
+        background flows — fall back to the nominal NIC capacity."""
+        w, r = conn
+        lb = self._loopback_of.get(conn)
+        if lb is not None:
+            return (lb,)
+        d = _direction_of(r)
+        cap = self.worker_dir_caps.get((w, d))
+        if cap is None:
+            cap = self.worker_nic_capacity
+        out = [(("link", r), self.link_caps.get(r, self.link_capacity)),
+               (("nic", w, d), cap)]
+        for key, gcap, links, w_host, w_dir in self.node_groups:
+            if r in links or (w == w_host and d == w_dir):
+                out.append((key, gcap))
         for rname, (cap_out, cap_in), rworkers, rlinks in self.rack_groups:
             # full duplex: one group per fabric direction.  A connection
             # crosses the rack iff exactly one endpoint is inside; it rides
             # the egress group if the transmitter is inside, the ingress
             # group if the receiver is.
-            egress, ingress = [], []
-            for c in net:
-                w, r = c
-                w_in = w in rworkers
-                l_in = r in rlinks
-                if w_in == l_in:
-                    continue               # intra-rack or fully outside
-                # downlink: shard host transmits; uplink: worker transmits
-                tx_in = l_in if _direction_of(r) == "downlink" else w_in
-                (egress if tx_in else ingress).append(c)
-            if egress:
-                caps[("rack", rname, "egress")] = cap_out
-                members[("rack", rname, "egress")] = egress
-            if ingress:
-                caps[("rack", rname, "ingress")] = cap_in
-                members[("rack", rname, "ingress")] = ingress
-        return caps, members
+            w_in = w in rworkers
+            l_in = r in rlinks
+            if w_in == l_in:
+                continue                   # intra-rack or fully outside
+            # downlink: shard host transmits; uplink: worker transmits
+            tx_in = l_in if d == "downlink" else w_in
+            if tx_in:
+                out.append(((("rack", rname, "egress")), cap_out))
+            else:
+                out.append(((("rack", rname, "ingress")), cap_in))
+        return tuple(out)

@@ -26,8 +26,10 @@ in topology mode, the water-filling allocator (`repro.core.bandwidth`).
 With a :class:`~repro.core.topology.Topology` the per-PS independent links
 are replaced by one shared-rate pool over the topology's capacity groups
 (worker NICs, shard-host NICs, colocated NICs, rack uplinks): weighted
-max-min rates recomputed on every membership change, per-flow projections
-epoch-tagged — the emulator counterpart of the simulator's general
+max-min rates recomputed on membership changes — group-locally, through
+``IncrementalWaterfill`` (``fabric_mode="batch"`` keeps the historical
+full re-solve; both modes are bit-identical) — with per-flow projections
+epoch-tagged; the emulator counterpart of the simulator's general
 per-connection path.
 """
 from __future__ import annotations
@@ -40,7 +42,7 @@ from collections import deque
 from dataclasses import dataclass
 from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
-from repro.core.bandwidth import waterfill
+from repro.core.bandwidth import IncrementalWaterfill, waterfill
 from repro.core.fluidlink import Flow, WeightedFluidLink
 from repro.core.overhead import RecordedOp, RecordedStep
 from repro.core.paper_models import DnnSpec, Platform
@@ -75,10 +77,18 @@ class _Fabric:
     Any membership change re-materializes remaining work at the old rates
     and re-projects every finite flow under the new ones; projections carry
     a pool epoch and are lazily dropped when stale.
+
+    By default the shares come from an :class:`IncrementalWaterfill`
+    keyed on the model's ``conn_groups`` — only the constraint
+    component(s) whose membership changed are re-solved, retiring the old
+    O(flows x groups) batch recompute per membership change.  The solver
+    is bit-identical to the batch path (``incremental=False``), so the two
+    modes produce byte-for-byte equal rate trajectories and traces — the
+    parity gate in ``tests/test_fabric_parity.py``.
     """
 
     def __init__(self, emu: "ClusterEmulator", model: TopologyBandwidthModel,
-                 bandwidth: float):
+                 bandwidth: float, incremental: bool = True):
         self.emu = emu
         self.model = model
         self.bandwidth = bandwidth      # nominal NIC rate, bytes/s
@@ -87,18 +97,28 @@ class _Fabric:
         self.rate: Dict[int, float] = {}
         self.t_mat: Dict[int, float] = {}
         self.epoch = 0
+        self.iwf = (IncrementalWaterfill(model.conn_groups, weighted=True)
+                    if incremental else None)
+        # optional (t, conn, rate) log per rebalance — the golden-trace
+        # fixture and the batch/incremental parity test record through it
+        self.rate_log: Optional[List[tuple]] = None
 
     def add_flow(self, t: float, flow: Flow, conn: Tuple[int, str]) -> None:
         self.flows[flow.fid] = flow
         self.conn[flow.fid] = conn
         self.rate[flow.fid] = 0.0
         self.t_mat[flow.fid] = t
+        if self.iwf is not None:
+            self.iwf.add(conn, weight=flow.weight)
         self._rebalance(t)
 
     def remove_flow(self, t: float, fid: int) -> None:
         if self.flows.pop(fid, None) is None:
             return
-        del self.conn[fid], self.rate[fid], self.t_mat[fid]
+        conn = self.conn.pop(fid)
+        del self.rate[fid], self.t_mat[fid]
+        if self.iwf is not None:
+            self.iwf.remove(conn)
         self._rebalance(t)
 
     def _rebalance(self, t: float) -> None:
@@ -108,22 +128,27 @@ class _Fabric:
         flow — the pool-level analogue of ``WeightedFluidLink``'s single
         link projection)."""
         self.epoch += 1
-        if not self.flows:
-            return
-        conns: List[Tuple[int, str]] = []
-        weights: Dict[Tuple[int, str], float] = {}
-        by_conn: Dict[Tuple[int, str], int] = {}
-        for fid, flow in self.flows.items():
-            c = self.conn[fid]
-            conns.append(c)
-            weights[c] = flow.weight
-            by_conn[c] = fid
-        caps, members = self.model.groups_for(conns)
-        shares = waterfill(conns, caps, members, weights=weights)
+        if self.iwf is not None:
+            # group-local re-solve: untouched components keep their cached
+            # shares (bit-identical to the batch solve below)
+            self.iwf.flush()
+            shares = self.iwf.shares
+            if not self.flows:
+                return
+        else:
+            if not self.flows:
+                return
+            conns: List[Tuple[int, str]] = []
+            weights: Dict[Tuple[int, str], float] = {}
+            for fid, flow in self.flows.items():
+                c = self.conn[fid]
+                conns.append(c)
+                weights[c] = flow.weight
+            caps, members = self.model.groups_for(conns)
+            shares = waterfill(conns, caps, members, weights=weights)
         earliest = None
-        for c, s in shares.items():
-            fid = by_conn[c]
-            flow = self.flows[fid]
+        for fid, flow in self.flows.items():
+            s = shares[self.conn[fid]]
             r_old = self.rate[fid]
             if math.isfinite(flow.remaining):
                 if r_old > 0.0:
@@ -139,6 +164,8 @@ class _Fabric:
                 r_new = s * self.bandwidth
             self.t_mat[fid] = t
             self.rate[fid] = r_new
+            if self.rate_log is not None:
+                self.rate_log.append((t, self.conn[fid], r_new))
         if earliest is not None:
             heapq.heappush(self.emu.timers,
                            (earliest if earliest > t else t, next(_seq),
@@ -165,7 +192,10 @@ class _Fabric:
         done: List[Flow] = []
         for _tc, fid in due:
             done.append(self.flows.pop(fid))
-            del self.conn[fid], self.rate[fid], self.t_mat[fid]
+            conn = self.conn.pop(fid)
+            del self.rate[fid], self.t_mat[fid]
+            if self.iwf is not None:
+                self.iwf.remove(conn)
         self._rebalance(t)
         for flow in done:
             if flow.on_complete:
@@ -189,7 +219,12 @@ class ClusterEmulator:
                  flow_control: bool = True, order: str = "profiled",
                  record_profile: bool = False,
                  topology: Optional[Topology] = None,
-                 sync: Optional[SyncSpec] = None):
+                 sync: Optional[SyncSpec] = None,
+                 fabric_mode: str = "incremental"):
+        if fabric_mode not in ("incremental", "batch"):
+            raise ValueError(
+                f"unknown fabric_mode {fabric_mode!r} (expected "
+                f"'incremental' or 'batch')")
         self.dnn = dnn
         self.batch_size = batch_size
         self.platform = platform
@@ -241,7 +276,8 @@ class ClusterEmulator:
         self.ps_speed: Optional[Dict[int, float]] = None
         if topology is not None:
             nominal = topology.bandwidth or platform.bandwidth
-            self.fabric = _Fabric(self, topology.grouped_model(), nominal)
+            self.fabric = _Fabric(self, topology.grouped_model(), nominal,
+                                  incremental=fabric_mode == "incremental")
             self.worker_speed = {i: n.speed
                                  for i, n in enumerate(topology.workers)}
             self.ps_speed = {p: topology.shard_host(p).speed

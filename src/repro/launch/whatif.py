@@ -125,7 +125,8 @@ def ps_cluster_main(args) -> None:
                          sync_mode=args.sync_mode,
                          backup_workers=args.backup_workers,
                          staleness_bound=args.staleness_bound,
-                         allreduce_algo=args.allreduce_algo).prepare()
+                         allreduce_algo=args.allreduce_algo,
+                         waterfill=args.waterfill).prepare()
     topo = build_whatif_topology(wmax, args.num_ps, oversub=args.oversub,
                                  racks=args.racks, ps_nic=args.ps_nic,
                                  colocate_ps=args.colocate_ps)
@@ -233,6 +234,12 @@ def main() -> None:
                          "report the best one (default strategy: greedy)")
     ap.add_argument("--profile-steps", type=int, default=30)
     ap.add_argument("--sim-steps", type=int, default=250)
+    ap.add_argument("--waterfill", default="auto",
+                    choices=["auto", "incremental", "batch"],
+                    help="general-path bandwidth re-solves: group-local "
+                         "incremental (default) or the historical full "
+                         "re-waterfill per membership change (identical "
+                         "shares; a perf A/B and differential baseline)")
     args = ap.parse_args()
     if args.straggler_worker < 1.0:
         ap.error(f"--straggler-worker is a slowdown factor and must be "

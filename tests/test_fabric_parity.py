@@ -1,0 +1,116 @@
+"""Emulator fabric-pool parity: incremental vs batch, plus a golden trace.
+
+The topology-mode fabric pool now solves its weighted max-min shares with
+``IncrementalWaterfill`` (group-local re-solves).  Because the incremental
+solver is bit-identical to the batch solver and both fabric modes share
+every other line of the event machinery, a fixed workload must produce
+**byte-for-byte identical** rate trajectories, step completions and
+throughput under ``fabric_mode="incremental"`` and ``fabric_mode="batch"``
+(the pre-incremental pool behavior, kept as the live oracle the way
+``simulator_ref.py`` gates the DES engine).
+
+A small frozen fixture (``tests/data/fabric_pool_golden.json``) addition-
+ally pins the batch pool's rate trajectory itself, so solver-level drift
+that changes both modes in lockstep is still caught.  Regenerate it after
+a *deliberate* semantic change with:
+
+    REPRO_REGEN_FIXTURES=1 python -m pytest tests/test_fabric_parity.py
+"""
+import json
+import os
+
+import pytest
+
+from repro.core.paper_models import PAPER_DNNS, PLATFORMS
+from repro.core.topology import Topology
+from repro.emulator.cluster import ClusterEmulator
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "data",
+                       "fabric_pool_golden.json")
+
+# the fixed workload: racked topology so rack-uplink groups couple links,
+# background flows on (aws_cpu's bg_rate), bandwidth-weight jitter on
+WORKLOAD = dict(dnn="googlenet", batch=32, platform="aws_cpu",
+                num_workers=6, seed=3, steps=12)
+
+
+def _topology():
+    return Topology.racked(6, 2, racks=2, oversubscription=3.0)
+
+
+def _norm_conn(conn):
+    """Background flows ride unique pseudo-worker connections whose ids
+    come from a process-global counter; normalize them so two emulator
+    instances (or a frozen fixture) compare equal."""
+    w, lid = conn
+    return ["bg", lid] if w < 0 else [w, lid]
+
+
+def _run(fabric_mode, rate_log_limit=None):
+    emu = ClusterEmulator(PAPER_DNNS[WORKLOAD["dnn"]], WORKLOAD["batch"],
+                          PLATFORMS[WORKLOAD["platform"]],
+                          num_workers=WORKLOAD["num_workers"],
+                          seed=WORKLOAD["seed"], topology=_topology(),
+                          fabric_mode=fabric_mode)
+    emu.fabric.rate_log = []
+    emu.run(steps_per_worker=WORKLOAD["steps"])
+    log = [[t, _norm_conn(c), r] for t, c, r in emu.fabric.rate_log]
+    if rate_log_limit is not None:
+        log = log[:rate_log_limit]
+    return emu, log
+
+
+def test_incremental_pool_matches_batch_pool_bit_for_bit():
+    emu_b, log_b = _run("batch")
+    emu_i, log_i = _run("incremental")
+    # the full rate trajectory — every (time, connection, rate) assignment
+    # the pool ever made — must be byte-for-byte identical
+    assert log_i == log_b
+    assert emu_i.step_completion_times == emu_b.step_completion_times
+    assert emu_i.throughput(warmup_steps=4) == emu_b.throughput(
+        warmup_steps=4)
+    # and the incremental pool must actually have solved incrementally
+    assert emu_i.fabric.iwf is not None
+    assert emu_i.fabric.iwf.stats["flushes"] > 0
+    assert emu_b.fabric.iwf is None
+
+
+def test_batch_pool_matches_golden_fixture():
+    """Solver-level golden gate: the batch pool's trajectory pinned at PR-5
+    time.  Tolerant to last-ulp libm differences across runners (rel 1e-12)
+    but exact on structure, ordering and step completions."""
+    emu, log = _run("batch", rate_log_limit=400)
+    payload = {
+        "workload": WORKLOAD,
+        "rate_log": log,
+        "step_completions": [[w, s, t]
+                             for w, s, t in emu.step_completion_times],
+        "throughput": emu.throughput(warmup_steps=4),
+    }
+    if os.environ.get("REPRO_REGEN_FIXTURES"):
+        os.makedirs(os.path.dirname(FIXTURE), exist_ok=True)
+        with open(FIXTURE, "w") as f:
+            json.dump(payload, f, indent=1)
+        pytest.skip(f"regenerated {FIXTURE}")
+    with open(FIXTURE) as f:
+        golden = json.load(f)
+    assert golden["workload"] == payload["workload"]
+    assert len(payload["rate_log"]) == len(golden["rate_log"])
+    for got, want in zip(payload["rate_log"], golden["rate_log"]):
+        assert got[1] == want[1]
+        assert got[0] == pytest.approx(want[0], rel=1e-12, abs=1e-15)
+        assert got[2] == pytest.approx(want[2], rel=1e-12)
+    assert [x[:2] for x in payload["step_completions"]] == \
+           [x[:2] for x in golden["step_completions"]]
+    for got, want in zip(payload["step_completions"],
+                         golden["step_completions"]):
+        assert got[2] == pytest.approx(want[2], rel=1e-12)
+    assert payload["throughput"] == pytest.approx(golden["throughput"],
+                                                  rel=1e-12)
+
+
+def test_fabric_mode_validated():
+    with pytest.raises(ValueError, match="fabric_mode"):
+        ClusterEmulator(PAPER_DNNS["googlenet"], 32, PLATFORMS["aws_cpu"],
+                        num_workers=2, topology=_topology(),
+                        fabric_mode="bogus")

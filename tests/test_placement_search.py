@@ -180,6 +180,58 @@ class TestValidation:
         assert DEFAULT_MAX_EXHAUSTIVE >= 4096
 
 
+class TestIncrementalWaterfill:
+    """PR-5 gates: the incremental group-local allocator must leave the
+    search results untouched (same placements, same scores as the
+    pre-incremental batch path) and candidate evaluation must actually
+    issue group-local re-solves, not hidden full re-waterfills."""
+
+    @pytest.mark.parametrize("strategy", ["greedy", "anneal"])
+    @pytest.mark.parametrize("num_shards", [2, 3])
+    def test_search_identical_to_batch_path(self, strategy, num_shards):
+        """The fig_placement families' regime (oversubscribed default rack
+        vs flat spare rack): batch and incremental engines must pick the
+        same placements with scores equal to float noise."""
+        topo = rack_pool_topology(num_shards)
+        res_i = search_placement(make_evaluator(topo, waterfill="auto"),
+                                 strategy, seed=5)
+        res_b = search_placement(make_evaluator(topo, waterfill="batch"),
+                                 strategy, seed=5)
+        assert res_i.placement == res_b.placement
+        assert res_i.baseline_placement == res_b.baseline_placement
+        assert res_i.throughput == pytest.approx(res_b.throughput,
+                                                 rel=1e-9)
+        assert res_i.baseline_throughput == pytest.approx(
+            res_b.baseline_throughput, rel=1e-9)
+        assert res_i.evaluated == res_b.evaluated
+
+    def test_candidate_evaluation_is_group_local(self):
+        """One candidate simulation, instrumented: most flushes are served
+        from the recurring-membership memo, true component solves are
+        rare, and the re-solved footprint stays below the full active set
+        — i.e. candidate evaluation issues group-local re-solves only."""
+        from repro.core.simulator import SimConfig, Simulation
+        topo = rack_pool_topology(2)
+        cfg = SimConfig(topology=topo, steps_per_worker=12, warmup_steps=2,
+                        seed=0, link_policy="fifo")
+        trace = Simulation(cfg).run(comm_heavy_steps(num_ps=2), 3)
+        stats = trace.meta["waterfill"]
+        assert stats["flushes"] > 20
+        # memoized group-local lookups dominate; full solves of the
+        # constraint graph are the exception, not the rule
+        assert stats["comp_solves"] < 0.25 * stats["flushes"]
+        assert stats["memo_hits"] > stats["comp_solves"]
+        assert stats["resolved_conns"] < 0.85 * stats["active_conn_events"]
+
+    def test_batch_mode_has_no_solver_stats(self):
+        from repro.core.simulator import SimConfig, Simulation
+        topo = rack_pool_topology(2)
+        cfg = SimConfig(topology=topo, steps_per_worker=6, warmup_steps=2,
+                        seed=0, link_policy="fifo", waterfill="batch")
+        trace = Simulation(cfg).run(comm_heavy_steps(num_ps=2), 3)
+        assert "waterfill" not in trace.meta
+
+
 class TestStragglerWhatIf:
     """The ROADMAP straggler knob: Node.speed threads through prediction
     AND the topology-aware emulator, and both report consistent

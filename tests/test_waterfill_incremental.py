@@ -1,0 +1,309 @@
+"""Differential harness: incremental vs batch water-filling.
+
+The incremental allocator (``bandwidth.IncrementalWaterfill``) must stay
+**bit-identical** — float for float, at every step — to the batch solver
+(``bandwidth.waterfill``) it caches.  This module drives randomized
+arrival/departure sequences through both and asserts share-for-share
+equality after every flush, across the group structures the engines
+actually compile: the paper's two-level star, heterogeneous link/NIC caps,
+extra (rack-like) groups, topology-compiled groups with asymmetric
+``nic_tx``/``nic_rx`` ports, loopback-bypass groups for colocated shards,
+and weighted flows (the emulator's fabric pool).  This is the safety gate
+that makes allocator rewrites cheap forever: any divergence — a stale
+share, a mis-maintained component, a wrong cap — fails here first.
+
+Set ``REPRO_CHECK_WATERFILL=1`` (as the CI ``waterfill-diff`` job does) to
+additionally self-validate every flush inside the solver itself.
+"""
+import random
+
+import pytest
+from _hypothesis_compat import HAVE_HYPOTHESIS
+
+from repro.core.bandwidth import (BandwidthModel, GroupedBandwidthModel,
+                                  IncrementalWaterfill, waterfill)
+from repro.core.topology import Node, Placement, Rack, Topology
+
+# ---------------------------------------------------------------------------
+# model structures under test
+# ---------------------------------------------------------------------------
+
+
+def _star_model():
+    """The paper's two-level 2-PS star (homogeneous caps)."""
+    model = BandwidthModel()
+    links = [f"{d}:{p}" for d in ("downlink", "uplink") for p in range(2)]
+    conns = [(w, r) for w in range(6) for r in links]
+    return model, conns
+
+
+def _grouped_model():
+    """Heterogeneous caps + nested extra groups (rack-like)."""
+    model = GroupedBandwidthModel(
+        link_caps={"downlink:0": 2.0, "uplink:1": 0.5},
+        worker_caps={0: 0.5, 3: 2.0},
+        extra_groups=[
+            ("fabric", 1.5, frozenset({"downlink:0", "downlink:1"})),
+            ("pair", 0.8, frozenset({(1, "uplink:0"), (2, "uplink:0")})),
+        ])
+    links = [f"{d}:{p}" for d in ("downlink", "uplink") for p in range(2)]
+    conns = [(w, r) for w in range(5) for r in links]
+    return model, conns
+
+
+def _racked_model():
+    """Racked topology: rack uplink groups + asymmetric NIC caps."""
+    topo = Topology(
+        workers=tuple(
+            Node(f"w{i}", nic_tx=0.5 if i % 2 else None,
+                 nic_rx=2.0 if i == 0 else None, rack=f"r{i % 2}")
+            for i in range(6)),
+        ps_nodes=(Node("ps0", rack="r0"), Node("ps1", nic=2.0, rack="r1")),
+        racks=(Rack("r0", oversubscription=3.0),
+               Rack("r1", uplink_capacity=1.25)),
+    )
+    model = topo.grouped_model()
+    links = [f"{d}:{p}" for d in ("downlink", "uplink") for p in range(2)]
+    conns = [(w, r) for w in range(6) for r in links]
+    return model, conns
+
+
+def _loopback_model():
+    """Colocated + sharded PS shards behind the loopback bypass."""
+    topo = Topology(
+        workers=tuple(Node(f"w{i}") for i in range(4)),
+        ps_nodes=(Node("ps0"),),
+        # shard 0 dedicated, shards 1+2 colocated on worker node w0
+        placement=Placement(("ps0", "w0", "w0")),
+        loopback_bypass=True, loopback_capacity=4.0,
+    )
+    model = topo.grouped_model()
+    links = [f"{d}:{p}" for d in ("downlink", "uplink") for p in range(3)]
+    conns = [(w, r) for w in range(4) for r in links]
+    return model, conns
+
+
+STRUCTURES = {
+    "star": _star_model,
+    "grouped": _grouped_model,
+    "racked_asym_nic": _racked_model,
+    "loopback": _loopback_model,
+}
+
+
+# ---------------------------------------------------------------------------
+# the differential driver
+# ---------------------------------------------------------------------------
+
+
+def _batch_solve(model, active, weights=None):
+    conns = sorted(active)
+    caps, members = model.groups_for(conns)
+    return waterfill(conns, caps, members, weights=weights)
+
+
+def drive(model, universe, seed, *, weighted=False, events=50,
+          batch_prob=0.35, check=False):
+    """One seeded arrival/departure sequence through both solvers.
+
+    Random joins/leaves (sometimes several per flush, like the DES batch
+    windows), exact share comparison after every flush and once more at
+    the end.  With ``weighted``, every connection carries a random weight
+    (the emulator's per-flow bandwidth jitter)."""
+    rng = random.Random(seed)
+    iwf = IncrementalWaterfill(model.conn_groups, weighted=weighted,
+                               check=check)
+    active = {}
+    for _ in range(events):
+        if active and rng.random() < 0.45:
+            c = rng.choice(sorted(active))
+            del active[c]
+            iwf.remove(c)
+        else:
+            c = universe[rng.randrange(len(universe))]
+            if c in active:
+                continue
+            w = rng.uniform(0.2, 3.0) if weighted else 1.0
+            active[c] = w
+            iwf.add(c, weight=w)
+        if rng.random() < batch_prob:
+            continue          # batch several membership ops into one flush
+        iwf.flush()
+        expect = _batch_solve(model, active,
+                              dict(active) if weighted else None)
+        assert iwf.shares == expect, (
+            f"divergence after {len(active)} active conns (seed {seed})")
+    iwf.flush()
+    expect = _batch_solve(model, active, dict(active) if weighted else None)
+    assert iwf.shares == expect
+    return iwf
+
+
+# 60 seeds x 4 structures = 240 unweighted sequences (+ weighted below):
+# well past the 200-sequence acceptance floor.
+@pytest.mark.parametrize("structure", sorted(STRUCTURES))
+@pytest.mark.parametrize("seed", range(60))
+def test_differential_unweighted(structure, seed):
+    model, universe = STRUCTURES[structure]()
+    drive(model, universe, seed)
+
+
+@pytest.mark.parametrize("structure", ["star", "racked_asym_nic",
+                                       "loopback"])
+@pytest.mark.parametrize("seed", range(25))
+def test_differential_weighted(structure, seed):
+    """Weighted max-min (the emulator fabric's regime), including unique
+    pseudo-worker connections like its background flows."""
+    model, universe = STRUCTURES[structure]()
+    universe = list(universe) + [(-1 - i, universe[0][1]) for i in range(3)]
+    drive(model, universe, 1000 + seed, weighted=True)
+
+
+def test_share_values_change_only_when_reported():
+    """flush() returns exactly the conns whose cached float moved — the
+    contract the DES engine relies on to skip re-projections."""
+    model, universe = STRUCTURES["star"]()
+    rng = random.Random(7)
+    iwf = IncrementalWaterfill(model.conn_groups)
+    active = set()
+    for _ in range(80):
+        before = dict(iwf.shares)
+        if active and rng.random() < 0.45:
+            c = rng.choice(sorted(active))
+            active.discard(c)
+            iwf.remove(c)
+        else:
+            c = universe[rng.randrange(len(universe))]
+            if c in active:
+                continue
+            active.add(c)
+            iwf.add(c)
+        changed = iwf.flush()
+        for conn, share in iwf.shares.items():
+            if conn in before and conn not in changed:
+                assert share == before[conn], \
+                    f"{conn} moved {before[conn]} -> {share} unreported"
+
+
+def test_invariant_mode_catches_corruption():
+    """REPRO_CHECK_WATERFILL semantics: a poisoned cache entry (the stale-
+    share bug class this PR hardens against) must raise on the next
+    flush, not silently propagate wrong rates."""
+    model, universe = STRUCTURES["star"]()
+    iwf = IncrementalWaterfill(model.conn_groups, check=True)
+    for c in universe[:6]:
+        iwf.add(c)
+    iwf.flush()
+    victim = next(iter(iwf.shares))
+    iwf.shares[victim] *= 0.5          # simulate a stale/corrupt share
+    iwf.add(universe[6])
+    with pytest.raises(AssertionError, match="diverged"):
+        iwf.flush()
+
+
+def test_invariant_mode_env(monkeypatch):
+    monkeypatch.setenv("REPRO_CHECK_WATERFILL", "1")
+    model, universe = STRUCTURES["racked_asym_nic"]()
+    iwf = IncrementalWaterfill(model.conn_groups)
+    assert iwf._check
+    drive(model, universe, 4, check=True)
+
+
+def test_simconfig_incremental_requires_grouped_model():
+    """waterfill='incremental' must insist: the uniform equal-share path
+    and custom shares() overrides error instead of silently degrading."""
+    from repro.core.events import Op, StepTemplate, ps_resources
+    from repro.core.simulator import SimConfig, Simulation
+    tpl = [StepTemplate(ops=[Op("d", "downlink", size=1e6)])]
+    cfg = SimConfig(resources=ps_resources(1e8, 1), waterfill="incremental")
+    with pytest.raises(ValueError, match="grouped bandwidth model"):
+        Simulation(cfg).run(tpl, 1)
+    with pytest.raises(ValueError, match="unknown waterfill mode"):
+        SimConfig(resources=ps_resources(1e8, 1), waterfill="bogus")
+
+
+def test_add_twice_rejected_and_remove_unknown_rejected():
+    model, universe = STRUCTURES["star"]()
+    iwf = IncrementalWaterfill(model.conn_groups)
+    iwf.add(universe[0])
+    with pytest.raises(ValueError, match="already active"):
+        iwf.add(universe[0])
+    with pytest.raises(KeyError):
+        iwf.remove(universe[1])
+
+
+def test_full_solve_fallback_is_exact():
+    """Force the full-solve escape hatch on every flush; results must be
+    identical anyway (it is a perf fallback, not a different algorithm)."""
+    model, universe = STRUCTURES["grouped"]()
+
+    class Eager(IncrementalWaterfill):
+        FULL_FRACTION = 0.0
+
+    rng = random.Random(11)
+    iwf = Eager(model.conn_groups)
+    active = set()
+    for _ in range(60):
+        if active and rng.random() < 0.4:
+            c = rng.choice(sorted(active))
+            active.discard(c)
+            iwf.remove(c)
+        else:
+            c = universe[rng.randrange(len(universe))]
+            if c in active:
+                continue
+            active.add(c)
+            iwf.add(c)
+        iwf.flush()
+        assert iwf.shares == _batch_solve(model, active)
+    assert iwf.stats["full_solves"] > 0
+
+
+# ---------------------------------------------------------------------------
+# hypothesis stateful machine (bonus tier; skipped without hypothesis)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    from hypothesis import settings
+    from hypothesis.stateful import (RuleBasedStateMachine, initialize,
+                                     invariant, rule)
+    from hypothesis import strategies as hst
+
+    class WaterfillMachine(RuleBasedStateMachine):
+        """Stateful differential test: arbitrary interleavings of joins,
+        leaves and flushes keep the incremental cache equal to the batch
+        solve of the current membership."""
+
+        @initialize(structure=hst.sampled_from(sorted(STRUCTURES)))
+        def setup(self, structure):
+            self.model, self.universe = STRUCTURES[structure]()
+            self.iwf = IncrementalWaterfill(self.model.conn_groups)
+            self.active = set()
+
+        @rule(i=hst.integers(0, 47))
+        def join(self, i):
+            c = self.universe[i % len(self.universe)]
+            if c not in self.active:
+                self.active.add(c)
+                self.iwf.add(c)
+
+        @rule(i=hst.integers(0, 47))
+        def leave(self, i):
+            if self.active:
+                c = sorted(self.active)[i % len(self.active)]
+                self.active.discard(c)
+                self.iwf.remove(c)
+
+        @rule()
+        def flush(self):
+            self.iwf.flush()
+
+        @invariant()
+        def matches_batch(self):
+            if hasattr(self, "iwf") and not self.iwf.pending:
+                assert self.iwf.shares == _batch_solve(self.model,
+                                                       self.active)
+
+    WaterfillMachine.TestCase.settings = settings(
+        max_examples=25, stateful_step_count=40, deadline=None)
+    TestWaterfillMachine = WaterfillMachine.TestCase
