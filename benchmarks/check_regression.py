@@ -63,6 +63,8 @@ def records(bench: dict) -> dict:
         out[("general", rec["mode"], rec["W"])] = rec
     for rec in bench.get("syncmode", []):
         out[("syncmode", rec["mode"], rec["W"])] = rec
+    for rec in bench.get("faults", []):
+        out[("faults", rec["mode"], rec["W"])] = rec
     return out
 
 

@@ -1,0 +1,244 @@
+"""Failure scenarios: churn x sync-mode x backup-policy goodput figure.
+
+The paper predicts throughput of a *healthy* cluster; this figure sweeps
+the fault-injection subsystem (``repro.core.faults``) over the failure
+regimes that dominate practice and asserts the qualitative behaviors the
+systems literature establishes (checkpoint/restore costs and barrier
+sensitivity to stragglers/churn, cf. arXiv:1805.03812):
+
+  * **flapping worker**: with worker 0 suffering five brief outages
+    (~1 step-time each), synchronous SGD loses a larger goodput fraction
+    than SSP — every outage stalls the *whole* barrier for the downtime
+    plus the restore cost, while a staleness bound wider than the
+    cumulative churn lets the survivors ride it out entirely and plain
+    async only loses the flapper's own contribution.  The bound must be
+    *sized to the churn*: ``ssp_s2``'s slack is smaller than the total
+    outage, so the flapper's step deficit gates the survivors almost
+    like the full barrier, while ``ssp_s8`` absorbs it (long outages
+    equalize every bounded mode the same way — that regime lives in the
+    MTTF sweep);
+  * **MTTF sweep**: as MTTF shrinks from ~run-length to a quarter of it,
+    goodput falls below the healthy baseline and the wasted-work
+    fraction (lost partial steps + stale-dropped gradients) grows from
+    exactly zero;
+  * **PS failover**: a warm backup shard colocated with a worker
+    restores a failed parameter-server shard at least 2x faster than
+    attaching a cold spare host (the shard's links carry zero capacity
+    for the whole failover window, so recovery time is the cost).
+
+All scenarios replay *explicit* or *seeded* incident lists through the
+ordinary DES calendar, so every cell is reproducible bit-for-bit.  Slow
+mode adds emulator ground truth for the flapping-async cell (the same
+FaultSpec replayed on the timer-driven cluster emulator).  Writes
+``benchmarks/results/fig_faults.json``:
+
+    PYTHONPATH=src python -m benchmarks.fig_faults [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+from dataclasses import replace
+
+from repro.core.faults import FaultSpec
+from repro.core.predictor import PredictionRun
+from repro.core.simulator import Simulation
+from repro.core.sweep import parallel_map
+
+from .common import row, save_json
+
+DNN = "googlenet"
+BATCH = 16
+PLATFORM = "private_cpu"
+W = 4
+WARMUP = 10            # early boundary: incidents land inside the window
+
+# (label, PredictionRun sync kwargs) — the churn-sensitive regimes; the
+# two SSP bounds bracket the flap scenario's cumulative outage (~6.5
+# step-times): s2 cannot absorb it, s8 can
+MODES = (
+    ("async", dict(sync_mode="async")),
+    ("sync", dict(sync_mode="sync")),
+    ("sync_backup1", dict(sync_mode="sync", backup_workers=1)),
+    ("ssp_s2", dict(sync_mode="ssp", staleness_bound=2)),
+    ("ssp_s8", dict(sync_mode="ssp", staleness_bound=8)),
+)
+
+
+def _fault_task(task) -> dict:
+    """One seeded DES run -> goodput / recovery / wasted-work metrics.
+
+    Metrics use the ``all-active`` window: a flapping worker retires its
+    fixed step budget late, and the tail where only it still runs would
+    otherwise dominate the async/SSP averages (the same straggler-tail
+    artifact fig_syncmode excludes) and mask the barrier-stall cost."""
+    cfg, templates, num_workers, batch_size, warmup_steps = task
+    trace = Simulation(cfg).run(templates, num_workers)
+    recov = trace.recovery_times()
+    return {"tput": trace.throughput(batch_size, warmup_steps,
+                                     window="all-active"),
+            "goodput": trace.goodput(batch_size, warmup_steps,
+                                     window="all-active"),
+            "wasted": trace.wasted_work_fraction(),
+            "recovery_mean": sum(recov) / len(recov) if recov else 0.0,
+            "incidents": len(trace.incidents)}
+
+
+def _mode_runs(profile_steps: int, sim_steps: int, num_ps: int = 1,
+               modes=MODES) -> dict:
+    """One PredictionRun per mode sharing a single profile (the paper's
+    premise: profile once, simulate every configuration — healthy or
+    churned)."""
+    runs = {}
+    base = PredictionRun(dnn=DNN, batch_size=BATCH, platform=PLATFORM,
+                         num_ps=num_ps, profile_steps=profile_steps,
+                         sim_steps=sim_steps, warmup_steps=WARMUP).prepare()
+    for label, kw in modes:
+        r = PredictionRun(dnn=DNN, batch_size=BATCH, platform=PLATFORM,
+                          num_ps=num_ps, profile_steps=profile_steps,
+                          sim_steps=sim_steps, warmup_steps=WARMUP, **kw)
+        r.profile = base.profile
+        r.overhead = base.overhead
+        r.sim_steps_templates = base.sim_steps_templates
+        runs[label] = r
+    return runs
+
+
+def _sim_end(run: PredictionRun) -> float:
+    """Simulated end time of one healthy seeded run — the clock the
+    incident times are placed on."""
+    cfg, templates, w, _b, _wu = run.prediction_tasks(W, 1)[0]
+    trace = Simulation(cfg).run(templates, w)
+    return trace.step_completions[-1][2]
+
+
+def _mean(outs, key: str) -> float:
+    return sum(o[key] for o in outs) / len(outs)
+
+
+def run(fast: bool = False, profile_steps=30, sim_steps=150, n_runs=3,
+        measure_steps=100) -> dict:
+    if fast:
+        profile_steps, sim_steps, n_runs = 20, 100, 2
+    runs = _mode_runs(profile_steps, sim_steps)
+    t_end = _sim_end(runs["async"])
+    out = {"figure": "fig_faults", "dnn": DNN, "batch": BATCH,
+           "platform": PLATFORM, "W": W, "sim_end_s": t_end,
+           "scenarios": {}, "checks": {}}
+
+    # worker 0 flaps: five brief outages (~1.2 step-times each, plus the
+    # checkpoint-restore cost) spread over the healthy run; checkpoints
+    # every step, so the differential is pure barrier-stall vs slack
+    step_s = t_end / sim_steps
+    flap = FaultSpec(crashes=tuple((k * t_end / 8, 0)
+                                   for k in range(2, 7)),
+                     mttr=1.2 * step_s)
+    # seeded churn processes for the MTTF sweep (each worker flips
+    # between up/down states; horizon covers the slower sync runs too)
+    mttfs = (t_end, t_end / 4) if fast else (t_end, t_end / 2, t_end / 4)
+    mttf_modes = ("async", "sync", "ssp_s2")
+
+    # -- build every simulation task up front; one pool fans them all ----
+    cells = []   # (scenario, mode, first task index, n_runs)
+    tasks = []
+
+    def add_cell(scen, label, r):
+        cells.append((scen, label, len(tasks), n_runs))
+        tasks.extend(r.prediction_tasks(W, n_runs))
+
+    for label in runs:
+        add_cell("healthy", label, runs[label])
+        add_cell("flap", label, replace(runs[label], faults=flap))
+    for mttf in mttfs:
+        spec = FaultSpec(mttf=mttf, mttr=t_end / 20, horizon=6 * t_end,
+                         ckpt_interval_steps=4)
+        for label in mttf_modes:
+            cells.append((f"mttf_{mttf / t_end:.2f}", label, len(tasks),
+                          n_runs))
+            for i in range(n_runs):
+                r = replace(runs[label],
+                            faults=replace(spec, fault_seed=100 + i))
+                tasks.append(r.prediction_tasks(W, n_runs)[i])
+
+    # PS failover: shard 0 of a 2-PS deployment dies mid-run; the policy
+    # decides how long its links stay dark
+    ps_runs = _mode_runs(profile_steps, sim_steps, num_ps=2,
+                         modes=MODES[:1])
+    t2 = _sim_end(ps_runs["async"])
+    add_cell("ps_failover", "healthy", ps_runs["async"])
+    for policy in ("spare", "colocated"):
+        spec = FaultSpec(ps_failures=((t2 / 2, 0),), backup_policy=policy)
+        add_cell("ps_failover", policy,
+                 replace(ps_runs["async"], faults=spec))
+
+    outs = parallel_map(_fault_task, tasks)
+
+    print("scenario,mode,goodput,tput,wasted,recovery_s,incidents")
+    scenarios: dict = {}
+    for scen, label, i0, n in cells:
+        chunk = outs[i0:i0 + n]
+        cell = {"goodput": _mean(chunk, "goodput"),
+                "tput": _mean(chunk, "tput"),
+                "wasted": _mean(chunk, "wasted"),
+                "recovery_mean_s": _mean(chunk, "recovery_mean"),
+                "incidents": _mean(chunk, "incidents")}
+        scenarios.setdefault(scen, {})[label] = cell
+        print(row(scen, label, f"{cell['goodput']:.2f}",
+                  f"{cell['tput']:.2f}", f"{cell['wasted']:.3f}",
+                  f"{cell['recovery_mean_s']:.2f}",
+                  f"{cell['incidents']:.1f}"), flush=True)
+    out["scenarios"] = scenarios
+
+    # -- emulator ground truth (slow mode; flapping async cell) ----------
+    if not fast:
+        r = replace(runs["async"], faults=flap)
+        healthy_m = runs["async"].measure(W, steps=measure_steps)
+        flap_m = r.measure(W, steps=measure_steps)
+        out["measured_flap"] = {"healthy": healthy_m, "flap": flap_m}
+        print(row("measured_flap", "async", f"{flap_m:.2f}",
+                  f"{healthy_m:.2f}", "-", "-", "-"), flush=True)
+        out["checks"]["emulator_flap_loses"] = flap_m < healthy_m
+
+    # -- qualitative gates -----------------------------------------------
+    def loss(scen: str, label: str) -> float:
+        healthy = scenarios["healthy"][label]["goodput"]
+        return 1.0 - scenarios[scen][label]["goodput"] / healthy
+
+    out["losses"] = {label: loss("flap", label) for label, _kw in MODES}
+    heavy = f"mttf_{mttfs[-1] / t_end:.2f}"
+    out["checks"]["flap_hurts_async"] = out["losses"]["async"] > 0.0
+    # gate on the bound that can absorb the churn; an undersized bound
+    # (ssp_s2) degenerates toward the barrier, which the figure *shows*
+    # rather than gates
+    out["checks"]["sync_loses_more_than_ssp"] = (
+        out["losses"]["sync"] > out["losses"]["ssp_s8"])
+    out["checks"]["sync_loses_more_under_churn"] = (
+        scenarios[heavy]["sync"]["goodput"]
+        < scenarios[heavy]["ssp_s2"]["goodput"])
+    out["checks"]["churn_cuts_goodput"] = (
+        scenarios[heavy]["async"]["goodput"]
+        < 0.98 * scenarios["healthy"]["async"]["goodput"])
+    out["checks"]["wasted_work_grows"] = (
+        scenarios["healthy"]["async"]["wasted"] == 0.0
+        and scenarios[heavy]["async"]["wasted"] > 0.0)
+    out["checks"]["colocated_failover_2x_cheaper"] = (
+        scenarios["ps_failover"]["spare"]["recovery_mean_s"]
+        >= 2.0 * scenarios["ps_failover"]["colocated"]["recovery_mean_s"]
+        > 0.0)
+
+    save_json("fig_faults", out)
+    print(f"# checks: {out['checks']}")
+    if not all(out["checks"].values()):
+        raise AssertionError(
+            f"qualitative fault-injection checks failed: {out['checks']}")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="CI-sized run")
+    args = ap.parse_args()
+    run(fast=args.fast)
+
+
+if __name__ == "__main__":
+    main()

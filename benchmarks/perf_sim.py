@@ -228,6 +228,50 @@ def run(fast: bool = False, skip_ref: bool = False,
                   f"{rec['speedup'] and round(rec['speedup'], 2)},"
                   f"{events},{events / t_new:.0f}", flush=True)
 
+    # fault-injection path (repro.core.faults): seeded worker churn and a
+    # degraded uplink delivered through the DES calendar, timed against
+    # the frozen reference engine running the same templates healthy (the
+    # ref engine predates fault injection and ignores cfg.faults: the
+    # stable machine-independent denominator).  A regression anywhere in
+    # the fault bookkeeping — incarnation checks, dead-chunk skips, link
+    # re-scaling — shows up as a speedup drop here.
+    from repro.core.faults import FaultSpec
+    name, layers, steps = sizes[min(1, len(sizes) - 1)]
+    sp = steps // 4 if fast else steps
+    tpls_f = [make_template(layers, seed=s) for s in range(3)]
+    fault_cases = (
+        ("churn", FaultSpec(mttf=20.0, mttr=2.0, horizon=600.0), {}),
+        ("churn_ssp", FaultSpec(mttf=20.0, mttr=2.0, horizon=600.0),
+         dict(sync_mode="ssp", staleness_bound=2)),
+        ("degrade", FaultSpec(degrade_links=("uplink",),
+                              degrade_factor=0.4, degrade_period=10.0,
+                              degrade_duration=4.0, horizon=600.0), {}),
+    )
+    out["faults"] = []
+    print("faults,mode,W,engine_s,ref_s,speedup,events,events_per_s")
+    for mode, spec, sync_kw in fault_cases:
+        for w in workers:
+            def cfg_fn(rep, spec=spec, sync_kw=sync_kw):
+                return make_cfg(sp, seed=rep, faults=spec, **sync_kw)
+            t_new, events, tput_new = time_engine(
+                Simulation, tpls_f, cfg_fn, w, reps)
+            if skip_ref:
+                t_ref = tput_ref = None
+            else:
+                t_ref, _e, tput_ref = time_engine(
+                    ReferenceSimulation, tpls_f, cfg_fn, w, reps)
+            rec = {"mode": mode, "workload": name, "W": w,
+                   "steps_per_worker": sp, "engine_s": t_new,
+                   "ref_s": t_ref,
+                   "speedup": (t_ref / t_new) if t_ref else None,
+                   "events": events, "events_per_s": events / t_new,
+                   "throughput": tput_new, "throughput_ref": tput_ref}
+            out["faults"].append(rec)
+            print(f"faults,{mode},{w},{t_new:.3f},"
+                  f"{t_ref if t_ref is None else round(t_ref, 3)},"
+                  f"{rec['speedup'] and round(rec['speedup'], 2)},"
+                  f"{events},{events / t_new:.0f}", flush=True)
+
     # figure-equivalent sweep: n_runs seeded sims per worker count, serial
     # in-process vs fanned across the pool (what the fig13/14/20/25
     # drivers now do)

@@ -31,10 +31,21 @@ def _flatten(tree) -> Tuple[list, Any]:
 
 def save(ckpt_dir: str, step: int, tree: Any,
          metadata: Optional[Dict] = None) -> str:
-    """Write a checkpoint atomically; returns the step directory."""
+    """Write a checkpoint atomically; returns the step directory.
+
+    Overwrites of an existing ``step_dir`` swap via a dot-prefixed trash
+    name (rename old aside -> rename tmp in -> delete old) instead of
+    rmtree-then-rename, so there is no window in which the step has no
+    valid checkpoint; a crash mid-swap is healed on the next call.
+    """
     os.makedirs(ckpt_dir, exist_ok=True)
     leaves, treedef = _flatten(tree)
     step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    trash = os.path.join(ckpt_dir, f".old_step_{step:08d}")
+    # heal an interrupted swap: the old tree was moved aside but the new
+    # one never landed — put the old checkpoint back before proceeding
+    if os.path.exists(trash) and not os.path.exists(step_dir):
+        os.rename(trash, step_dir)
     tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
     try:
         manifest = {
@@ -52,9 +63,19 @@ def save(ckpt_dir: str, step: int, tree: Any,
                 {"index": i, "dtype": str(arr.dtype), "shape": list(arr.shape)})
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
-        if os.path.exists(step_dir):
-            shutil.rmtree(step_dir)
-        os.rename(tmp, step_dir)
+        had_old = os.path.exists(step_dir)
+        if had_old:
+            if os.path.exists(trash):
+                shutil.rmtree(trash)
+            os.rename(step_dir, trash)
+        try:
+            os.rename(tmp, step_dir)
+        except BaseException:
+            if had_old and not os.path.exists(step_dir):
+                os.rename(trash, step_dir)   # roll the old checkpoint back
+            raise
+        if had_old:
+            shutil.rmtree(trash, ignore_errors=True)
     except BaseException:
         shutil.rmtree(tmp, ignore_errors=True)
         raise

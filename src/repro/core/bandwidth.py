@@ -207,6 +207,12 @@ class BandwidthModel:
         return ((("link", r), self.link_capacity),
                 (("nic", w, _direction_of(r)), self.worker_nic_capacity))
 
+    def link_group_key(self, res_name: str) -> object:
+        """The capacity-group key that caps one link resource — the handle
+        fault injection uses to scale a degraded link's capacity through
+        :meth:`IncrementalWaterfill.set_scale`."""
+        return ("link", res_name)
+
     def groups_for(self, conns: Sequence[Conn]
                    ) -> Tuple[Dict[object, float], Dict[object, list]]:
         """Caps/members over an explicit connection list, aggregated from
@@ -354,9 +360,13 @@ class IncrementalWaterfill:
         # component recurs inside different affected sets)
         self._comp_memo: Dict[FrozenSet[Conn], Dict[Conn, float]] = {}
         self.shares: Dict[Conn, float] = {}
+        # per-group capacity multipliers (fault injection: degradation
+        # epochs / PS failover); empty in healthy runs, where every code
+        # path below is bit-identical to the pre-scaling solver
+        self._scale: Dict[object, float] = {}
         self.stats = {"flushes": 0, "full_solves": 0, "comp_solves": 0,
                       "memo_hits": 0, "resolved_conns": 0,
-                      "active_conn_events": 0}
+                      "active_conn_events": 0, "scale_events": 0}
 
     # ------------------------------------------------------------ mutation
 
@@ -403,6 +413,34 @@ class IncrementalWaterfill:
                     del self._members[k]
                     del self._caps[k]
         self._dirty.add(conn)
+
+    def set_scale(self, key: object, factor: float) -> None:
+        """Scale one capacity group to ``factor`` × its nominal capacity
+        (1.0 restores it; 0.0 freezes its members) — a time-varying
+        capacity-group update, the waterfill half of fault injection's
+        link-degradation and PS-failover epochs.
+
+        The static-structure contract is untouched: ``add`` keeps
+        validating *nominal* capacities, and the scale is applied at solve
+        time.  Every connection currently riding the group is marked dirty
+        so the next :meth:`flush` re-solves exactly the touched
+        component(s); solve memos are invalidated (shares now depend on
+        the scale state).
+        """
+        if factor < 0:
+            raise ValueError(f"capacity scale must be >= 0, got {factor}")
+        prev = self._scale.get(key, 1.0)
+        if factor == prev:
+            return
+        if factor == 1.0:
+            del self._scale[key]
+        else:
+            self._scale[key] = factor
+        self.stats["scale_events"] += 1
+        self._memo.clear()
+        self._comp_memo.clear()
+        for c in self._members.get(key, ()):
+            self._dirty.add(c)
 
     # ------------------------------------------------------------- solving
 
@@ -539,6 +577,10 @@ class IncrementalWaterfill:
                     members[k] = [c]
                 else:
                     ms.append(c)
+        if self._scale:
+            for k, factor in self._scale.items():
+                if k in caps:
+                    caps[k] = caps[k] * factor
         return caps, members
 
     def _solve(self, comp: FrozenSet[Conn]) -> Dict[Conn, float]:

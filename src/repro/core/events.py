@@ -176,6 +176,10 @@ class LiveOp:
     remaining_work: float = 0.0
     start_time: float = -1.0
     end_time: float = -1.0
+    # Worker incarnation this op belongs to (fault injection): a crash
+    # bumps the worker's incarnation, orphaning every older LiveOp so
+    # stale calendar rejoins can be recognized and dropped.
+    gen: int = 0
 
     @classmethod
     def fresh(cls, template: Op, worker: int, step_seq: int,
@@ -246,6 +250,11 @@ class Trace:
     # update (updates by other workers between parameter read and apply) —
     # the staleness accounting of ``repro.core.syncmode``
     staleness: List[int] = field(default_factory=list)
+    # fault-injection incidents (``repro.core.faults``): dicts with kind
+    # ('crash' | 'preempt' | 'ps_fail' | 'degrade'), target (worker index,
+    # shard index or link name), t_down, t_up, recovery, and for worker
+    # incidents in_step (was a step in flight when the worker died?)
+    incidents: List[Dict[str, object]] = field(default_factory=list)
 
     def add(self, worker: int, res: str, name: str, step_seq: int,
             start: float, end: float) -> None:
@@ -258,6 +267,53 @@ class Trace:
         """mean/p50/p99/max version lag over all completed steps."""
         from .syncmode import staleness_stats
         return staleness_stats(self.staleness)
+
+    def measurement_window(self, warmup_steps: int = 50,
+                           window: str = "common"
+                           ) -> Tuple[float, float]:
+        """The (start, end) measurement window (paper §4.1 convention).
+
+        Per worker, the start boundary is its ``warmup_steps``-th
+        completion; the window runs from the latest boundary to the last
+        completion overall (``"common"``) or the earliest per-worker last
+        completion (``"all-active"``).
+
+        **Incident awareness:** with fault incidents recorded, a worker
+        that crashed early could otherwise reach its k-th completion only
+        after restarting — silently sliding the window start past the
+        churn it is supposed to measure.  A restored worker resumes from
+        its checkpoint (its desynchronization persists; there is no
+        re-warm), so each worker's warmup boundary is capped at its first
+        incident's t_down.
+        """
+        if window not in ("common", "all-active"):
+            raise ValueError(f"unknown throughput window {window!r}")
+        if not self.step_completions:
+            return (0.0, 0.0)
+        per_worker: Dict[int, List[float]] = {}
+        for w, _seq, t in self.step_completions:
+            per_worker.setdefault(w, []).append(t)
+        first_down: Dict[int, float] = {}
+        for inc in self.incidents:
+            if inc.get("kind") in ("crash", "preempt"):
+                wi = inc["target"]
+                td = inc["t_down"]
+                if wi not in first_down or td < first_down[wi]:
+                    first_down[wi] = td
+        boundaries = []
+        ends = []
+        for w, times in per_worker.items():
+            times.sort()
+            k = warmup_steps if len(times) > warmup_steps else max(1, len(times) // 2)
+            b = times[k - 1]
+            cap = first_down.get(w)
+            if cap is not None and cap < b:
+                b = cap
+            boundaries.append(b)
+            ends.append(times[-1])
+        window_start = max(boundaries)
+        window_end = max(ends) if window == "common" else min(ends)
+        return (window_start, window_end)
 
     def throughput(self, batch_size: int, warmup_steps: int = 50,
                    window: str = "common") -> float:
@@ -273,28 +329,59 @@ class Trace:
         the fair steady-state window when worker speeds are heterogeneous
         (a fixed per-worker step budget otherwise lets the straggler-only
         tail dominate the average).
+
+        Downtime inside the window is *not* excluded: throughput under
+        churn is supposed to show the loss.  :meth:`goodput` additionally
+        excludes updates the barrier dropped as stale.
         """
-        if window not in ("common", "all-active"):
-            raise ValueError(f"unknown throughput window {window!r}")
-        if not self.step_completions:
-            return 0.0
-        per_worker: Dict[int, List[float]] = {}
-        for w, _seq, t in self.step_completions:
-            per_worker.setdefault(w, []).append(t)
-        # Common window: from the latest per-worker warmup boundary to the
-        # latest completion. Conservative and stable for N >= 200.
-        boundaries = []
-        ends = []
-        for w, times in per_worker.items():
-            times.sort()
-            k = warmup_steps if len(times) > warmup_steps else max(1, len(times) // 2)
-            boundaries.append(times[k - 1])
-            ends.append(times[-1])
-        window_start = max(boundaries)
-        window_end = max(ends) if window == "common" else min(ends)
+        window_start, window_end = self.measurement_window(warmup_steps,
+                                                           window)
         if window_end <= window_start:
             return 0.0
         n_in_window = sum(
             1 for _w, _s, t in self.step_completions if window_start < t <= window_end
         )
         return n_in_window * batch_size / (window_end - window_start)
+
+    def goodput(self, batch_size: int, warmup_steps: int = 50,
+                window: str = "common") -> float:
+        """examples/s of *applied* updates — throughput-under-churn.
+
+        Counts only steps whose gradient contributed to the model: under
+        the sync / allreduce barrier a stale completion (nonzero version
+        lag) is a dropped gradient and is excluded; async and SSP apply
+        every update, so goodput equals throughput there.  Recovery gaps
+        still dilute the window, so worker churn lowers goodput even in
+        async mode.
+        """
+        window_start, window_end = self.measurement_window(warmup_steps,
+                                                           window)
+        if window_end <= window_start:
+            return 0.0
+        mode = getattr(self, "meta", {}).get("sync_mode", "async")
+        drops = (self.staleness if mode in ("sync", "allreduce")
+                 and len(self.staleness) == len(self.step_completions)
+                 else None)
+        n = 0
+        for i, (_w, _s, t) in enumerate(self.step_completions):
+            if window_start < t <= window_end:
+                if drops is None or drops[i] == 0:
+                    n += 1
+        return n * batch_size / (window_end - window_start)
+
+    def recovery_times(self) -> List[float]:
+        """Per-incident recovery time (t_up - t_down), worker churn and PS
+        failover alike, in schedule order."""
+        return [float(inc["recovery"]) for inc in self.incidents
+                if inc.get("kind") != "degrade"]
+
+    def wasted_work_fraction(self) -> float:
+        """Fraction of worker busy-time spent on work that never became an
+        applied update: step progress lost to a crash/preemption plus
+        whole steps whose gradient the barrier dropped as stale.  Engines
+        record the two accumulators in ``trace.meta``."""
+        meta = getattr(self, "meta", {})
+        wasted = float(meta.get("wasted_work_s", 0.0))
+        useful = float(meta.get("useful_work_s", 0.0))
+        total = wasted + useful
+        return wasted / total if total > 0 else 0.0

@@ -122,8 +122,8 @@ class WeightedFluidLink(_ClockBase):
         heap = self.heap
         while heap and heap[0][2].fid not in self.flows:
             heapq.heappop(heap)   # flow was force-removed; drop lazily
-        if not heap or self.total_w <= 0:
-            return None
+        if not heap or self.total_w <= 0 or self.bandwidth <= 0:
+            return None   # bandwidth 0: link is down (PS failover epoch)
         self.materialize(t)
         dt = (heap[0][0] - self.V) * self.total_w / self.bandwidth
         return t + (dt if dt > 0.0 else 0.0)

@@ -16,6 +16,7 @@ from typing import Dict, List, Optional, Sequence
 from repro.core import baselines as bl
 from repro.core.bandwidth import BandwidthModel, EqualShareModel
 from repro.core.events import StepTemplate, ps_resources
+from repro.core.faults import FaultSpec
 from repro.core.overhead import (OverheadModel, RecordedStep,
                                  preprocess_profile)
 from repro.core.paper_models import PAPER_DNNS, PLATFORMS, Platform
@@ -68,6 +69,11 @@ class PredictionRun:
     # "auto" = group-local incremental solves (bit-identical shares),
     # "batch" = the historical full re-waterfill per membership change.
     waterfill: str = "auto"
+    # Fault schedule (repro.core.faults).  None = healthy cluster.  The
+    # same FaultSpec is compiled to the same incident list in the DES
+    # engine and the emulator (both keyed off spec.fault_seed), so
+    # prediction and ground truth see identical churn.
+    faults: Optional["FaultSpec"] = None
 
     # filled by prepare()
     profile: List[RecordedStep] = field(default_factory=list)
@@ -156,6 +162,7 @@ class PredictionRun:
             staleness_bound=self.staleness_bound,
             allreduce_algo=self.allreduce_algo,
             waterfill=self.waterfill,
+            faults=self.faults,
         )
 
     def templates_for(self, num_workers: int) -> list:
@@ -208,6 +215,25 @@ class PredictionRun:
         stats["versions"] = trace.meta["num_versions"]
         return stats
 
+    def robustness_report(self, num_workers: int) -> Dict[str, float]:
+        """Goodput / recovery / wasted-work summary of one seeded
+        simulation under this run's fault schedule (requires ``faults``)."""
+        if self.faults is None:
+            raise ValueError("robustness_report needs a FaultSpec "
+                             "(set PredictionRun.faults)")
+        cfg, templates, W, batch, warm = self.prediction_tasks(num_workers,
+                                                               1)[0]
+        trace = Simulation(cfg).run(templates, W)
+        recov = trace.recovery_times()
+        return {
+            "throughput": trace.throughput(batch, warmup_steps=warm),
+            "goodput": trace.goodput(batch, warmup_steps=warm),
+            "incidents": float(len(trace.incidents)),
+            "mean_recovery_s": (sum(recov) / len(recov)) if recov else 0.0,
+            "wasted_work_frac": trace.wasted_work_fraction(),
+            "lost_steps": float(trace.meta.get("lost_steps", 0)),
+        }
+
     def predict(self, num_workers: int, n_runs: int = 3,
                 parallel: bool = False) -> float:
         """Our method's predicted examples/s for W workers.
@@ -255,7 +281,7 @@ class PredictionRun:
             steps=steps, seed=self.seed + seed_offset,
             flow_control=self.flow_control, order=self.order,
             warmup_steps=self.warmup_steps, topology=self.topology,
-            sync=self.sync_spec())
+            sync=self.sync_spec(), faults=self.faults)
 
 
 def prediction_error(predicted: float, measured: float) -> float:

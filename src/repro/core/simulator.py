@@ -43,6 +43,7 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 from .bandwidth import BandwidthModel, EqualShareModel, IncrementalWaterfill
 from .events import (COMPUTE, LINK, Chunk, LiveOp, ResourceSpec,
                      StepTemplate, Trace)
+from .faults import FaultSpec, compile_faults, shard_link_names
 from .fluidlink import EqualShareLink
 from .schedulers import FifoScheduler, Scheduler, make_link_scheduler
 from .syncmode import SyncSpec, make_controller
@@ -67,6 +68,7 @@ _K_REJOIN = 0    # a = LiveOp to re-queue
 _K_COMPUTE = 1   # a = (worker, res) key, b = Chunk; exact, never stale
 _K_LINK = 2      # a = link name, b = rate epoch; stale if epoch moved on
 _K_CONN = 3      # a = (worker, res) key, b = conn epoch (general mode)
+_K_FAULT = 4     # a = FaultEvent, b = True (down edge) / False (up edge)
 
 
 _LINK_POLICIES = ("http2", "fifo", "ordered")
@@ -126,6 +128,13 @@ class SimConfig:
     # behavior, kept as the differential baseline and escape hatch).
     # "incremental" insists and errors if the model cannot support it.
     waterfill: str = "auto"
+    # Fault injection (repro.core.faults): worker crash/restart churn,
+    # spot preemption, PS-shard failover and per-link capacity degradation
+    # as ordinary calendar events.  None or an empty spec leaves every
+    # code path bit-identical to the healthy engine (golden-trace gates);
+    # the schedule is drawn from the spec's own fault_seed, never from the
+    # simulation RNG.
+    faults: Optional[FaultSpec] = None
 
     def sync_spec(self) -> SyncSpec:
         return SyncSpec(mode=self.sync_mode,
@@ -194,6 +203,10 @@ class SimConfig:
             if s <= 0:
                 raise ValueError(
                     f"resource {r!r}: compute speed must be > 0, got {s}")
+        if self.faults is not None and not isinstance(self.faults, FaultSpec):
+            raise ValueError(
+                f"faults= expects a repro.core.faults.FaultSpec, got "
+                f"{type(self.faults).__name__}")
         spec = self.sync_spec()   # validates mode/backup/bound/algo
         if spec.mode == "allreduce" and "collective" not in self.resources:
             # the collective phases of the mode-aware step DAG run on a
@@ -256,6 +269,31 @@ class Simulation:
         iwf = (IncrementalWaterfill(cfg.bandwidth_model.conn_groups)
                if incr else None)
 
+        # Fault injection: compile the spec into the per-run incident
+        # schedule (drawn from its own RNG stream — the simulation RNG is
+        # untouched, so an empty schedule leaves this run bit-identical
+        # to the healthy engine and no fault branch below is ever taken).
+        fs = cfg.faults
+        fault_mode = fs is not None and not fs.empty()
+        schedule = None
+        if fault_mode:
+            link_names = [r for r, s in resources.items() if s.kind == LINK]
+            if cfg.topology is not None:
+                num_shards = cfg.topology.num_shards
+            else:
+                num_shards = sum(1 for r in resources
+                                 if r == "uplink" or r.startswith("uplink:"))
+            schedule = compile_faults(fs, num_workers, link_names=link_names,
+                                      num_shards=max(1, num_shards))
+            fault_mode = bool(schedule.incidents)
+        if (fault_mode and schedule.link_events() and not uniform
+                and iwf is None):
+            raise ValueError(
+                "link degradation / PS failover on the general bandwidth "
+                "path needs the incremental waterfill (waterfill='auto' or "
+                "'incremental' with a grouped model); the batch re-solve "
+                "path has no capacity-scaling hook")
+
         workers = range(num_workers)
         scheds: Dict[Tuple[int, str], Scheduler] = {}
         for w in workers:
@@ -314,6 +352,18 @@ class Simulation:
         sample_idx: Dict[int, int] = {w: 0 for w in workers}
         op_times: List[Tuple[int, int, str, str, float, float]] = []
 
+        # fault state: down set, per-worker incarnation (orphans stale
+        # rejoins/projections of killed steps), per-link capacity scales
+        # (uniform path; the general path scales waterfill groups), and
+        # the useful/wasted work accounting behind goodput metrics
+        down_workers: Set[int] = set()
+        incarn: List[int] = [0] * num_workers
+        link_scale: Dict[str, float] = {}
+        step_start_t: List[float] = [0.0] * num_workers
+        useful_s = 0.0
+        wasted_s = 0.0
+        lost_steps = 0
+
         stall = cfg.stall_alpha * cfg.win + cfg.stall_rtt
         jitter_sigma = cfg.service_jitter
         jitter_mu = -0.5 * jitter_sigma * jitter_sigma
@@ -347,10 +397,12 @@ class Simulation:
                 tpl_cache[id(tpl)] = cached
             ops, works, edges, roots = cached
             seq = completed[w]
+            gen = incarn[w]
+            step_start_t[w] = t
             live: List[LiveOp] = [
                 LiveOp(uid=next(uid_counter), template=op, worker=w,
                        step_seq=seq, remaining_deps=len(op.deps),
-                       remaining_work=wk)
+                       remaining_work=wk, gen=gen)
                 for op, wk in zip(ops, works)
             ]
             for d, i in edges:
@@ -439,7 +491,109 @@ class Simulation:
                 return links[e[3]].epoch == e[4]
             if kind == _K_CONN:
                 return conn_epoch.get(e[3], -1) == e[4]
+            if kind == _K_COMPUTE and fault_mode:
+                # a crash pops the worker's chunks from `running`; the
+                # exact-time calendar entry left behind is orphaned
+                return running.get(e[3]) is e[4]
             return True
+
+        def set_link_scale(lname: str, factor: float) -> None:
+            """Apply a degradation epoch edge: scale one link's capacity."""
+            nonlocal shares_dirty
+            if uniform:
+                if factor == 1.0:
+                    link_scale.pop(lname, None)
+                else:
+                    link_scale[lname] = factor
+                dirty_links.add(lname)
+            else:
+                iwf.set_scale(
+                    cfg.bandwidth_model.link_group_key(lname), factor)
+                shares_dirty = True
+
+        def kill_worker(w: int, t: float) -> None:
+            """Remove every trace of a crashed worker from the fabric:
+            running chunks, queued streams, link membership, shares."""
+            nonlocal shares_dirty
+            for rname in resources:
+                key = (w, rname)
+                # compute chunks: the popped entry orphans the exact-time
+                # calendar projection (entry_valid); link chunks: the dead
+                # heap entry is dropped lazily at drain/projection time
+                running.pop(key, None)
+                if is_link[rname]:
+                    link = links[rname]
+                    if w in link.active:
+                        link.active.discard(w)
+                        if uniform:
+                            dirty_links.add(rname)
+                        else:
+                            shares_dirty = True
+                            conn_epoch[key] = conn_epoch.get(key, 0) + 1
+                            conn_rate.pop(key, None)
+                            conn_mtime.pop(key, None)
+                            needs_proj.discard(key)
+                            if iwf is not None:
+                                iwf.remove(key)
+                    scheds[key] = make_link_scheduler(cfg.link_policy,
+                                                      cfg.win)
+                else:
+                    scheds[key] = FifoScheduler()
+            pending_ops[w] = 0
+
+        def fault_event(inc, is_down: bool, t: float) -> None:
+            nonlocal wasted_s, lost_steps
+            kind = inc.kind
+            if kind in ("crash", "preempt"):
+                w = inc.target
+                if w >= num_workers:
+                    return
+                if is_down:
+                    if w in down_workers:
+                        return
+                    in_step = pending_ops[w] > 0
+                    if in_step:
+                        wasted_s += t - step_start_t[w]
+                        lost_steps += 1
+                    incarn[w] += 1
+                    down_workers.add(w)
+                    kill_worker(w, t)
+                    trace.incidents.append({
+                        "kind": kind, "target": w, "t_down": inc.t_down,
+                        "t_up": inc.t_up, "recovery": inc.t_up - inc.t_down,
+                        "in_step": in_step})
+                    released = sync_ctl.on_worker_down(w, in_step, t)
+                else:
+                    if w not in down_workers:
+                        return
+                    down_workers.discard(w)
+                    k = fs.ckpt_interval_steps
+                    floor = (completed[w] // k) * k if k > 0 else completed[w]
+                    released = sync_ctl.on_worker_up(w, floor, t)
+                    if completed[w] < cfg.steps_per_worker:
+                        start_step(w, t)
+                for rw in released:
+                    if rw not in down_workers \
+                            and completed[rw] < cfg.steps_per_worker:
+                        start_step(rw, t)
+            elif kind == "ps_fail":
+                for lname in shard_link_names(inc.target, resources,
+                                              cfg.topology):
+                    set_link_scale(lname, 0.0 if is_down else 1.0)
+                if is_down:
+                    trace.incidents.append({
+                        "kind": kind, "target": inc.target,
+                        "t_down": inc.t_down, "t_up": inc.t_up,
+                        "recovery": inc.t_up - inc.t_down})
+            else:   # degrade
+                set_link_scale(inc.target,
+                               inc.factor if is_down else 1.0)
+                if is_down:
+                    trace.incidents.append({
+                        "kind": kind, "target": inc.target,
+                        "t_down": inc.t_down, "t_up": inc.t_up,
+                        "recovery": inc.t_up - inc.t_down,
+                        "factor": inc.factor})
 
         def finalize_batch(t: float) -> None:
             """Refresh rates/projections for links touched in this batch."""
@@ -452,8 +606,19 @@ class Simulation:
                     # (1/n) * B, not B/n: matches the reference engine's
                     # share-then-scale arithmetic to the last ulp
                     link.rate = (1.0 / n) * link.bandwidth if n else 0.0
+                    if link_scale:
+                        sc = link_scale.get(rname)
+                        if sc is not None:
+                            link.rate *= sc   # degradation epoch in force
                     link.epoch += 1
-                    if link.heap:
+                    if fault_mode:
+                        # crashed workers leave dead heap entries behind;
+                        # drop them before projecting the earliest finish
+                        lheap = link.heap
+                        while lheap and running.get(lheap[0][2]) \
+                                is not lheap[0][3]:
+                            heapq.heappop(lheap)
+                    if link.heap and link.rate > 0.0:
                         dt = (link.heap[0][0] - link.V) / link.rate
                         heapq.heappush(
                             calendar,
@@ -521,6 +686,12 @@ class Simulation:
         for w in workers:
             start_step(w, t)
         finalize_batch(t)
+        if fault_mode:
+            for inc in schedule.incidents:
+                heapq.heappush(calendar, (inc.t_down, next(cal_seq),
+                                          _K_FAULT, inc, True))
+                heapq.heappush(calendar, (inc.t_up, next(cal_seq),
+                                          _K_FAULT, inc, False))
 
         total_steps_target = num_workers * cfg.steps_per_worker
         steps_done = 0
@@ -530,7 +701,8 @@ class Simulation:
             1, max(len(s.ops) for s in steps)
         )
 
-        while (running or rejoin_pending) and steps_done < total_steps_target:
+        while (running or rejoin_pending or down_workers) \
+                and steps_done < total_steps_target:
             guard += 1
             if guard > max_events:
                 raise RuntimeError("simulator event-count guard tripped (livelock?)")
@@ -553,6 +725,8 @@ class Simulation:
                     eps = _EPS_REJOIN
                 elif kind == _K_COMPUTE:
                     eps = _EPS_COMPUTE
+                elif kind == _K_FAULT:
+                    eps = 0.0
                 else:
                     eps = eps_link
                 if e2[0] > t + eps:
@@ -561,12 +735,21 @@ class Simulation:
                 if entry_valid(e2):
                     batch.append(e2)
 
+            # -- fault edges first: crashes must orphan their worker's
+            # chunks before this batch's rejoins/completions are processed
+            if fault_mode:
+                for e2 in batch:
+                    if e2[2] == _K_FAULT:
+                        fault_event(e2[3], e2[4], t)
+
             # -- due rejoins first (reference engine order) --
             for e2 in batch:
                 if e2[2] != _K_REJOIN:
                     continue
                 rejoin_pending -= 1
                 lop = e2[3]
+                if fault_mode and lop.gen != incarn[lop.worker]:
+                    continue   # rejoin of a pre-crash incarnation
                 scheds[(lop.worker, lop.res)].add(lop)
                 try_start_chunk(lop.worker, lop.res, t)
 
@@ -576,6 +759,8 @@ class Simulation:
             for e2 in batch:
                 kind = e2[2]
                 if kind == _K_COMPUTE:
+                    if fault_mode and running.get(e2[3]) is not e2[4]:
+                        continue   # killed by a crash in this batch
                     completions.append((e2[4].seq, e2[3], e2[4]))
                 elif kind == _K_LINK:
                     rname = e2[3]
@@ -592,8 +777,15 @@ class Simulation:
                     popped = False
                     while lheap and lheap[0][0] <= v_lim:
                         _v, cseq, key, chunk = heapq.heappop(lheap)
+                        if fault_mode and running.get(key) is not chunk:
+                            continue   # chunk's worker crashed
                         completions.append((cseq, key, chunk))
                         popped = True
+                    if fault_mode:
+                        # drop dead heads so the stuck-head rescue below
+                        # never resurrects a crashed worker's chunk
+                        while lheap and running.get(lheap[0][2]) is not lheap[0][3]:
+                            heapq.heappop(lheap)
                     if not popped and lheap and link.rate > 0.0:
                         # residual virtual work implies a time step below
                         # one ulp of t: no representable progress is
@@ -607,7 +799,9 @@ class Simulation:
                     dirty_links.add(rname)
                 elif kind == _K_CONN:
                     key = e2[3]
-                    chunk = running[key]
+                    chunk = running.get(key) if fault_mode else running[key]
+                    if chunk is None:
+                        continue   # worker crashed earlier in this batch
                     completions.append((chunk.seq, key, chunk))
                     conn_epoch[key] += 1   # invalidate residual projections
                     del conn_rate[key], conn_mtime[key]
@@ -665,8 +859,15 @@ class Simulation:
                     trace.complete_step(w, completed[w] - 1, t)
                     lag, released = sync_ctl.on_step_complete(w, t)
                     trace.staleness.append(lag)
+                    if fault_mode:
+                        dt_step = t - step_start_t[w]
+                        if lag and sync_ctl.drops_stale:
+                            wasted_s += dt_step   # stale gradient dropped
+                        else:
+                            useful_s += dt_step
                     for rw in released:
-                        if completed[rw] < cfg.steps_per_worker:
+                        if rw not in down_workers and \
+                                completed[rw] < cfg.steps_per_worker:
                             start_step(rw, t)
 
             finalize_batch(t)
@@ -680,6 +881,13 @@ class Simulation:
             "num_versions": sync_ctl.version,
             "barrier_commits": list(sync_ctl.commits),
         }
+        if fault_mode:
+            trace.meta.update(  # type: ignore[attr-defined]
+                useful_work_s=useful_s,
+                wasted_work_s=wasted_s,
+                lost_steps=lost_steps,
+                num_incidents=len(trace.incidents),
+            )
         if iwf is not None:
             # solver work profile: lets tests assert that candidate
             # evaluation issues only group-local re-solves

@@ -138,14 +138,14 @@ def simulate_task(task: SimTask) -> float:
 def measure_task(args: tuple) -> float:
     """One seeded cluster-emulator measurement -> examples/s."""
     (dnn, batch_size, platform, num_workers, num_ps, steps, seed,
-     flow_control, order, warmup_steps, topology, sync) = args
+     flow_control, order, warmup_steps, topology, sync, faults) = args
     from repro.core.paper_models import PAPER_DNNS, PLATFORMS
     from repro.emulator.cluster import measure_throughput
     return measure_throughput(
         PAPER_DNNS[dnn], batch_size, PLATFORMS[platform], num_workers,
         num_ps=num_ps, steps=steps, seed=seed, flow_control=flow_control,
         order=order, warmup_steps=warmup_steps, topology=topology,
-        sync=sync)
+        sync=sync, faults=faults)
 
 
 def _run_tagged(tagged: tuple) -> float:
@@ -159,7 +159,8 @@ def _measure_args(run, num_workers: int, steps: int, seed_offset: int) -> tuple:
     sync = run.sync_spec() if hasattr(run, "sync_spec") else None
     return (run.dnn, run.batch_size, run.platform, num_workers, run.num_ps,
             steps, run.seed + seed_offset, run.flow_control, run.order,
-            run.warmup_steps, getattr(run, "topology", None), sync)
+            run.warmup_steps, getattr(run, "topology", None), sync,
+            getattr(run, "faults", None))
 
 
 def _shared_templates(run) -> Optional[list]:

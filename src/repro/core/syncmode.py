@@ -111,7 +111,19 @@ class SyncController:
     that already reached their step target).  ``version`` counts applied
     updates (async/ssp) or committed global steps (sync/allreduce);
     ``commits`` records barrier-commit times for the trace metadata.
+
+    Fault injection (``repro.core.faults``) adds two hooks: engines call
+    :meth:`on_worker_down` when a worker crashes or is preempted (with
+    ``in_step`` telling whether a step was in flight) and
+    :meth:`on_worker_up` when it rejoins after restore; both return
+    workers newly allowed to start a step, exactly like
+    ``on_step_complete``'s ``released``.  ``drops_stale`` tells engines
+    whether a nonzero-lag completion means the gradient was dropped
+    (sync/allreduce barrier) or still applied (async/SSP) — the
+    distinction behind goodput and wasted-work accounting.
     """
+
+    drops_stale = False
 
     def __init__(self, num_workers: int):
         self.num_workers = num_workers
@@ -127,6 +139,18 @@ class SyncController:
         self.version += 1
         return lag, (w,)
 
+    def on_worker_down(self, w: int, in_step: bool,
+                       t: float) -> Tuple[int, ...]:
+        """A worker left the cluster (crash/preemption); async: no shared
+        state to repair, nobody is blocked on it."""
+        return ()
+
+    def on_worker_up(self, w: int, ckpt_version: int,
+                     t: float) -> Tuple[int, ...]:
+        """The worker rejoined after restore; ``ckpt_version`` is the
+        iteration its checkpoint rolls it back to (SSP accounting)."""
+        return ()
+
 
 class BarrierController(SyncController):
     """k-of-n barrier (``sync``; ``allreduce`` uses it with k = n).
@@ -137,7 +161,18 @@ class BarrierController(SyncController):
     quorum larger than the set of workers still participating).  Stale
     completions are dropped gradients: the worker records its version lag
     and immediately rejoins at the current version.
+
+    Under fault injection the quorum k stays *fixed* (TensorFlow's
+    ``replicas_to_aggregate``): while at most ``backups`` workers are
+    down, the barrier re-elects its backup slack and keeps committing —
+    a crash of the last awaited straggler commits the round immediately.
+    Plain sync (no backups) instead *stalls* on any crash: the survivors
+    hold their gradients at the barrier until the worker restores and
+    re-contributes, which is exactly the churn penalty that makes
+    backup/SSP modes worth their staleness.
     """
+
+    drops_stale = True
 
     def __init__(self, num_workers: int, quorum: int):
         super().__init__(num_workers)
@@ -147,6 +182,9 @@ class BarrierController(SyncController):
                 f"{quorum} (backup_workers must stay below the worker "
                 f"count)")
         self.quorum = quorum
+        self.backups = num_workers - quorum
+        self.live = num_workers
+        self.down = 0           # workers currently crashed/preempted
         self.arrived = 0        # fresh gradients of the current version
         self.in_flight = 0      # running steps started at the current version
         self.waiting: List[int] = []   # fresh arrivals held at the barrier
@@ -162,7 +200,11 @@ class BarrierController(SyncController):
             return self.version - self.v_start[w], (w,)
         self.in_flight -= 1
         self.arrived += 1
-        if self.arrived >= self.quorum or self.in_flight == 0:
+        # the in-flight-exhausted commit covers end-of-run shrinkage; a
+        # *down* worker beyond the backup slack is expected back, so the
+        # barrier holds the round open for it instead
+        if self.arrived >= self.quorum or (self.in_flight == 0
+                                           and self.down <= self.backups):
             self.version += 1
             self.arrived = 0
             # any step still running was started at the now-superseded
@@ -177,6 +219,37 @@ class BarrierController(SyncController):
         self.waiting.append(w)
         return 0, ()
 
+    def _commit(self, t: float) -> Tuple[int, ...]:
+        self.version += 1
+        self.arrived = 0
+        self.in_flight = 0
+        self.commits.append(t)
+        released = tuple(self.waiting)
+        self.waiting.clear()
+        return released
+
+    def on_worker_down(self, w: int, in_step: bool,
+                       t: float) -> Tuple[int, ...]:
+        self.live -= 1
+        self.down += 1
+        if w in self.waiting:
+            # its gradient already arrived; it just can't be released
+            self.waiting.remove(w)
+        elif in_step and self.v_start[w] == self.version:
+            self.in_flight -= 1
+        if self.down <= self.backups and self.arrived > 0 \
+                and (self.arrived >= self.quorum or self.in_flight == 0):
+            # within the backup slack the round commits without the
+            # crashed straggler; past it the survivors stall until rejoin
+            return self._commit(t)
+        return ()
+
+    def on_worker_up(self, w: int, ckpt_version: int,
+                     t: float) -> Tuple[int, ...]:
+        self.live += 1
+        self.down -= 1
+        return ()
+
 
 class SspController(SyncController):
     """Stale-synchronous parallel: a worker may start iteration c only
@@ -190,9 +263,14 @@ class SspController(SyncController):
         self.bound = bound
         self.completed = [0] * num_workers
         self.waiting: List[int] = []
+        self.active = set(range(num_workers))
 
     def _eligible(self, w: int) -> bool:
-        return self.completed[w] - min(self.completed) <= self.bound
+        # the lead is measured over *live* workers only: a crashed
+        # straggler must not freeze the whole cluster at its last count
+        floor = min(self.completed[v] for v in self.active) \
+            if self.active else self.completed[w]
+        return self.completed[w] - floor <= self.bound
 
     def on_step_complete(self, w: int, t: float) -> Tuple[int, Tuple[int, ...]]:
         lag = self.version - self.v_start[w]
@@ -211,6 +289,30 @@ class SspController(SyncController):
         else:
             self.waiting.append(w)
         return lag, tuple(released)
+
+    def on_worker_down(self, w: int, in_step: bool,
+                       t: float) -> Tuple[int, ...]:
+        self.active.discard(w)
+        if w in self.waiting:
+            self.waiting.remove(w)
+        # the slowest-live floor may have risen: release newly eligible
+        released = []
+        for v in list(self.waiting):
+            if self._eligible(v):
+                self.waiting.remove(v)
+                released.append(v)
+        return tuple(released)
+
+    def on_worker_up(self, w: int, ckpt_version: int,
+                     t: float) -> Tuple[int, ...]:
+        """The restored worker resumes from its checkpoint: its iteration
+        counter rolls back to ``ckpt_version``, which may *lower* the
+        slowest-live floor and stall leaders at the bound — the SSP
+        version-reset cost of a restart."""
+        self.active.add(w)
+        if ckpt_version < self.completed[w]:
+            self.completed[w] = ckpt_version
+        return ()
 
 
 def make_controller(spec: SyncSpec, num_workers: int) -> SyncController:

@@ -43,6 +43,7 @@ from dataclasses import dataclass
 from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.bandwidth import IncrementalWaterfill, waterfill
+from repro.core.faults import FaultSpec, compile_faults, shard_link_names
 from repro.core.fluidlink import Flow, WeightedFluidLink
 from repro.core.overhead import RecordedOp, RecordedStep
 from repro.core.paper_models import DnnSpec, Platform
@@ -209,6 +210,7 @@ class _Conn:
         self.queue: Deque[_Stream] = deque()
         self.transmitting: Optional[_Stream] = None
         self.win_state: float = 0.0  # AR(1) state (relative deviation)
+        self.flow_fid: Optional[int] = None  # active burst (fault kill path)
 
 
 class ClusterEmulator:
@@ -220,7 +222,8 @@ class ClusterEmulator:
                  record_profile: bool = False,
                  topology: Optional[Topology] = None,
                  sync: Optional[SyncSpec] = None,
-                 fabric_mode: str = "incremental"):
+                 fabric_mode: str = "incremental",
+                 faults: Optional[FaultSpec] = None):
         if fabric_mode not in ("incremental", "batch"):
             raise ValueError(
                 f"unknown fabric_mode {fabric_mode!r} (expected "
@@ -263,6 +266,19 @@ class ClusterEmulator:
         # DES engine; async is pure bookkeeping)
         self.sync_ctl = make_controller(self.sync, num_workers)
         self.staleness: List[int] = []
+
+        # fault replay (same FaultSpec -> same compiled schedule as the
+        # DES engine; see repro.core.faults).  incarn orphans the timer
+        # closures of a crashed worker's old life — every worker-owned
+        # callback captures its generation and returns if it is stale.
+        self.faults = faults
+        self._fault_mode = False
+        self.incarn = [0] * num_workers
+        self.down: set = set()
+        self.incidents: List[Dict[str, object]] = []
+        self.useful_s = 0.0
+        self.wasted_s = 0.0
+        self.lost_steps = 0
 
         # event machinery
         self.t = 0.0
@@ -409,6 +425,105 @@ class ClusterEmulator:
             self.links[lid].remove_flow(self.t, fid)
             self._schedule_link(lid)
 
+    # --------------------------------------------------------- fault replay
+
+    def _set_link_scale(self, lname: str, factor: float) -> None:
+        """Degradation / failover edge: scale one link's capacity."""
+        if self.fabric is not None:
+            self.fabric.iwf.set_scale(
+                self.fabric.model.link_group_key(lname), factor)
+            self.fabric._rebalance(self.t)
+        else:
+            link = self.links[lname]
+            link.materialize(self.t)
+            link.bandwidth = self.platform.bandwidth * factor
+            link._set_rate()
+            link.epoch += 1
+            self._schedule_link(lid=lname)
+
+    def _kill_worker(self, w: int) -> None:
+        """Erase a crashed worker's in-flight state: execution units,
+        queued streams, the active burst on every connection.  Timer
+        closures of the old incarnation are orphaned by the gen check."""
+        self.worker_busy[w] = False
+        self.worker_q[w].clear()
+        self.parse_busy[w] = False
+        self.parse_q[w].clear()
+        self.coll_busy[w] = False
+        self.coll_q[w].clear()
+        for p in range(self.M):
+            self.ps_busy[(w, p)] = False
+            self.ps_q[(w, p)].clear()
+        for lid in self._lids:
+            conn = self.conns[(w, lid)]
+            conn.queue.clear()
+            if conn.transmitting is not None:
+                fid = conn.flow_fid
+                conn.transmitting = None
+                conn.flow_fid = None
+                if fid is not None:
+                    if self.fabric is not None:
+                        self.fabric.remove_flow(self.t, fid)
+                    else:
+                        self.links[lid].remove_flow(self.t, fid)
+                        self._schedule_link(lid)
+        self.pending_ops[w] = 0
+
+    def _fault_event(self, inc, is_down: bool) -> None:
+        kind = inc.kind
+        if kind in ("crash", "preempt"):
+            w = inc.target
+            if w >= self.W:
+                return
+            if is_down:
+                if w in self.down:
+                    return
+                in_step = self.pending_ops[w] > 0
+                if in_step:
+                    self.wasted_s += self.t - self.step_start_time[w]
+                    self.lost_steps += 1
+                self.incarn[w] += 1
+                self.down.add(w)
+                self._kill_worker(w)
+                self.incidents.append({
+                    "kind": kind, "target": w, "t_down": inc.t_down,
+                    "t_up": inc.t_up, "recovery": inc.t_up - inc.t_down,
+                    "in_step": in_step})
+                released = self.sync_ctl.on_worker_down(w, in_step, self.t)
+            else:
+                if w not in self.down:
+                    return
+                self.down.discard(w)
+                k = self.faults.ckpt_interval_steps
+                c = self.completed_steps[w]
+                floor = (c // k) * k if k > 0 else c
+                released = self.sync_ctl.on_worker_up(w, floor, self.t)
+                if c < self.steps_target:
+                    self._start_step(w)
+            for rw in released:
+                if rw not in self.down \
+                        and self.completed_steps[rw] < self.steps_target:
+                    self._start_step(rw)
+        elif kind == "ps_fail":
+            names = shard_link_names(
+                inc.target, {lid: None for lid in self._lids}, self.topology)
+            for lname in names:
+                self._set_link_scale(lname, 0.0 if is_down else 1.0)
+            if is_down:
+                self.incidents.append({
+                    "kind": kind, "target": inc.target,
+                    "t_down": inc.t_down, "t_up": inc.t_up,
+                    "recovery": inc.t_up - inc.t_down})
+        else:   # degrade
+            self._set_link_scale(inc.target,
+                                 inc.factor if is_down else 1.0)
+            if is_down:
+                self.incidents.append({
+                    "kind": kind, "target": inc.target,
+                    "t_down": inc.t_down, "t_up": inc.t_up,
+                    "recovery": inc.t_up - inc.t_down,
+                    "factor": inc.factor})
+
     # --------------------------------------------------------- op lifecycle
 
     def _op_ready(self, w: int, op_idx: int) -> None:
@@ -467,8 +582,11 @@ class ClusterEmulator:
             self.platform.noise_compute) / self._wspeed(w)
         if self.record_profile:
             self.current_records[w][op_idx].start = self.t
+        gen = self.incarn[w]
 
         def done():
+            if gen != self.incarn[w]:
+                return   # worker crashed while this op was running
             self.worker_busy[w] = False
             self._op_done(w, op_idx)
             self._worker_kick(w)
@@ -489,8 +607,11 @@ class ClusterEmulator:
         p = self.platform
         dur = (p.overhead_alpha * size + p.overhead_beta) * self._lognorm(
             p.noise_compute) / self._wspeed(w)
+        gen = self.incarn[w]
 
         def done():
+            if gen != self.incarn[w]:
+                return
             self.parse_busy[w] = False
             self._op_done(w, op_idx)
             self._parse_kick(w)
@@ -504,8 +625,11 @@ class ClusterEmulator:
         self.coll_busy[w] = True
         if self.record_profile:
             self.current_records[w][op_idx].start = self.t
+        gen = self.incarn[w]
 
         def done():
+            if gen != self.incarn[w]:
+                return
             self.coll_busy[w] = False
             self._op_done(w, op_idx)
             self._coll_kick(w)
@@ -520,8 +644,11 @@ class ClusterEmulator:
             # record actual execution start (request time is irrelevant for
             # PS compute ops; TF traces report the executed interval)
             self.current_records[w][op_idx].start = self.t
+        gen = self.incarn[w]
 
         def done():
+            if gen != self.incarn[w]:
+                return
             self.ps_busy[(w, p)] = False
             self._op_done(w, op_idx)
             self._ps_kick(w, p)
@@ -557,16 +684,23 @@ class ClusterEmulator:
             preempt = False
         weight = self._lognorm(p.noise_bandwidth)
         flow = Flow(fid=next(_seq), weight=weight, remaining=burst)
+        conn.flow_fid = flow.fid
+        gen = self.incarn[stream.worker]
 
         def burst_done():
+            if gen != self.incarn[stream.worker]:
+                return   # crashed mid-burst (flow was force-removed)
             stream.remaining -= burst
             conn.transmitting = None
+            conn.flow_fid = None
             if preempt:
                 stream.serviced_once = True
                 # remainder eligible after the receiver parses this burst
                 stall = p.overhead_alpha * burst + p.rtt
 
                 def rejoin():
+                    if gen != self.incarn[stream.worker]:
+                        return
                     conn.queue.append(stream)
                     self._conn_kick(conn, lid)
 
@@ -626,8 +760,15 @@ class ClusterEmulator:
                              meta=dict(self.template.meta)))
         lag, released = self.sync_ctl.on_step_complete(w, self.t)
         self.staleness.append(lag)
+        if self._fault_mode:
+            dt = self.t - self.step_start_time[w]
+            if lag and self.sync_ctl.drops_stale:
+                self.wasted_s += dt   # stale gradient dropped at the barrier
+            else:
+                self.useful_s += dt
         for rw in released:
-            if self.completed_steps[rw] < self.steps_target:
+            if rw not in self.down \
+                    and self.completed_steps[rw] < self.steps_target:
                 self._start_step(rw)
 
     # ------------------------------------------------------------- main loop
@@ -641,6 +782,28 @@ class ClusterEmulator:
                 self._dependents[d].append(i)
 
         self.steps_target = steps_per_worker
+        fs = self.faults
+        if fs is not None and not fs.empty():
+            schedule = compile_faults(
+                fs, self.W, link_names=self._lids, num_shards=self.M,
+                resources={lid: None for lid in self._lids},
+                topology=self.topology)
+            self._fault_mode = bool(schedule.incidents)
+            if (self._fault_mode and schedule.link_events()
+                    and self.fabric is not None and self.fabric.iwf is None):
+                raise ValueError(
+                    "link fault events (ps_failures / degradation) need the "
+                    "incremental fabric; fabric_mode='batch' has no "
+                    "capacity-scaling hook")
+            for inc in schedule.incidents:
+                heapq.heappush(
+                    self.timers,
+                    (inc.t_down, next(_seq),
+                     lambda inc=inc: self._fault_event(inc, True)))
+                heapq.heappush(
+                    self.timers,
+                    (inc.t_up, next(_seq),
+                     lambda inc=inc: self._fault_event(inc, False)))
         for w in range(self.W):
             self._start_step(w)
 
@@ -669,30 +832,67 @@ class ClusterEmulator:
 
     # ------------------------------------------------------------ public API
 
-    def throughput(self, warmup_steps: int = 50,
-                   window: str = "common") -> float:
-        """Measured examples/s (paper §4.1: average after warmup window).
-        ``window`` follows ``Trace.throughput``: "common" (default) or
-        "all-active" (end at the earliest per-worker last completion —
-        fair under heterogeneous worker speeds)."""
+    def _measurement_window(self, warmup_steps: int,
+                            window: str) -> Tuple[float, float]:
+        """Same boundary logic as ``Trace.measurement_window``, including
+        the incident cap: a worker's warmup boundary never slides past its
+        first crash/preemption (the restored worker resumes from a
+        checkpoint — it does not re-warm)."""
         if window not in ("common", "all-active"):
             raise ValueError(f"unknown throughput window {window!r}")
         per_worker: Dict[int, List[float]] = {}
         for w, _s, t in self.step_completion_times:
             per_worker.setdefault(w, []).append(t)
         if not per_worker:
-            return 0.0
+            return 0.0, 0.0
+        first_down: Dict[int, float] = {}
+        for inc in self.incidents:
+            if inc["kind"] in ("crash", "preempt"):
+                w = inc["target"]
+                td = inc["t_down"]
+                if w not in first_down or td < first_down[w]:
+                    first_down[w] = td
         boundaries, ends = [], []
-        for times in per_worker.values():
+        for w, times in per_worker.items():
             times.sort()
-            k = warmup_steps if len(times) > warmup_steps else max(1, len(times) // 2)
-            boundaries.append(times[k - 1])
+            k = warmup_steps if len(times) > warmup_steps \
+                else max(1, len(times) // 2)
+            b = times[k - 1]
+            cap = first_down.get(w)
+            if cap is not None and cap < b:
+                b = cap
+            boundaries.append(b)
             ends.append(times[-1])
         w0 = max(boundaries)
         w1 = max(ends) if window == "common" else min(ends)
+        return w0, w1
+
+    def throughput(self, warmup_steps: int = 50,
+                   window: str = "common") -> float:
+        """Measured examples/s (paper §4.1: average after warmup window).
+        ``window`` follows ``Trace.throughput``: "common" (default) or
+        "all-active" (end at the earliest per-worker last completion —
+        fair under heterogeneous worker speeds)."""
+        w0, w1 = self._measurement_window(warmup_steps, window)
         if w1 <= w0:
             return 0.0
         n = sum(1 for _w, _s, t in self.step_completion_times if w0 < t <= w1)
+        return n * self.batch_size / (w1 - w0)
+
+    def goodput(self, warmup_steps: int = 50,
+                window: str = "common") -> float:
+        """Examples/s of *applied* updates: stale completions dropped by a
+        sync/allreduce barrier are excluded from the numerator; downtime
+        still dilutes the window (``Trace.goodput``'s counterpart)."""
+        w0, w1 = self._measurement_window(warmup_steps, window)
+        if w1 <= w0:
+            return 0.0
+        drops = self.sync_ctl.drops_stale \
+            and len(self.staleness) == len(self.step_completion_times)
+        n = 0
+        for i, (_w, _s, t) in enumerate(self.step_completion_times):
+            if w0 < t <= w1 and not (drops and self.staleness[i] > 0):
+                n += 1
         return n * self.batch_size / (w1 - w0)
 
     def staleness_stats(self) -> Dict[str, float]:
@@ -725,11 +925,13 @@ def measure_throughput(dnn: DnnSpec, batch_size: int, platform: Platform,
                        order: str = "profiled",
                        warmup_steps: int = 50,
                        topology: Optional[Topology] = None,
-                       sync: Optional[SyncSpec] = None) -> float:
+                       sync: Optional[SyncSpec] = None,
+                       faults: Optional[FaultSpec] = None) -> float:
     """Ground-truth measurement (the paper's 'real cluster' datapoint)."""
     emu = ClusterEmulator(dnn, batch_size, platform, num_workers=num_workers,
                           num_ps=num_ps, seed=seed, flow_control=flow_control,
-                          order=order, topology=topology, sync=sync)
+                          order=order, topology=topology, sync=sync,
+                          faults=faults)
     emu.run(steps_per_worker=steps)
     return emu.throughput(warmup_steps=warmup_steps)
 

@@ -160,6 +160,29 @@ def ps_cluster_main(args) -> None:
             print(f"# staleness W={w}: mean={st['mean']:.2f} "
                   f"p50={st['p50']:.0f} p99={st['p99']:.0f} "
                   f"max={st['max']:.0f} versions={st['versions']}")
+    if args.mttf or args.preempt_rate or args.degrade_links:
+        from dataclasses import replace
+
+        from repro.core.faults import FaultSpec
+        spec = FaultSpec(mttf=args.mttf, mttr=args.mttr,
+                         preempt_rate=args.preempt_rate,
+                         preempt_downtime=args.mttr,
+                         degrade_links=tuple(args.degrade_links),
+                         degrade_factor=args.degrade_factor,
+                         degrade_period=args.degrade_period,
+                         degrade_duration=args.degrade_duration,
+                         fault_seed=args.fault_seed)
+        churn = replace(base.with_topology(topo), faults=spec)
+        print(f"# failure/churn scenario: mttf={args.mttf} mttr={args.mttr} "
+              f"preempt_rate={args.preempt_rate} "
+              f"degrade={args.degrade_links or '-'} seed={args.fault_seed}")
+        print(f"{'W':>3s} {'ex/s':>10s} {'goodput':>10s} {'incid':>6s} "
+              f"{'recov_s':>8s} {'wasted%':>8s}")
+        for w in args.workers:
+            r = churn.robustness_report(w)
+            print(f"{w:3d} {r['throughput']:10.2f} {r['goodput']:10.2f} "
+                  f"{int(r['incidents']):6d} {r['mean_recovery_s']:8.2f} "
+                  f"{100.0 * r['wasted_work_frac']:8.2f}")
     if args.optimize_placement:
         optimize_placement_report(base, topo, wmax,
                                   strategy=args.optimize_placement)
@@ -232,6 +255,28 @@ def main() -> None:
                     choices=["greedy", "exhaustive", "anneal"],
                     help="search PS shard placements of the topology and "
                          "report the best one (default strategy: greedy)")
+    # failure / churn what-ifs (repro.core.faults; PS-cluster mode)
+    ap.add_argument("--mttf", type=float, default=0.0,
+                    help="mean time to failure per worker in simulated "
+                         "seconds (0 = no crashes; PS-cluster mode)")
+    ap.add_argument("--mttr", type=float, default=0.0,
+                    help="mean repair time per crash/preemption; every "
+                         "restart also pays the checkpoint-restore cost")
+    ap.add_argument("--preempt-rate", type=float, default=0.0,
+                    help="spot preemptions per second per worker")
+    ap.add_argument("--degrade-links", nargs="+", default=[],
+                    metavar="LINK",
+                    help="links with stochastic capacity-degradation "
+                         "epochs (e.g. uplink or uplink:0)")
+    ap.add_argument("--degrade-factor", type=float, default=0.5,
+                    help="capacity multiplier during a degraded epoch")
+    ap.add_argument("--degrade-period", type=float, default=60.0,
+                    help="mean healthy gap between degraded epochs (s)")
+    ap.add_argument("--degrade-duration", type=float, default=15.0,
+                    help="mean length of a degraded epoch (s)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed of the dedicated fault-schedule RNG "
+                         "(the simulation RNG is never touched)")
     ap.add_argument("--profile-steps", type=int, default=30)
     ap.add_argument("--sim-steps", type=int, default=250)
     ap.add_argument("--waterfill", default="auto",
@@ -257,6 +302,9 @@ def main() -> None:
             ap.error("--sync-mode/--backup-workers/--staleness-bound "
                      "require --ps-cluster (TPU mode models all-reduce "
                      "natively via the DCN collective ops)")
+        if args.mttf or args.mttr or args.preempt_rate or args.degrade_links:
+            ap.error("--mttf/--mttr/--preempt-rate/--degrade-links require "
+                     "--ps-cluster (fault injection runs in the PS DES)")
 
     if args.backup_workers and args.sync_mode != "sync":
         ap.error("--backup-workers only relaxes the sync-mode barrier "

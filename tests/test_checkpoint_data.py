@@ -50,6 +50,61 @@ class TestCheckpoint:
                       if d.startswith("step_"))
         assert dirs == ["step_00000004", "step_00000005"]
 
+    def test_overwrite_crash_window_preserves_old_checkpoint(
+            self, tmp_path, monkeypatch):
+        """Regression: ``save()`` used to rmtree the old step dir before
+        renaming the new one in — a crash in that window left the step
+        with NO valid checkpoint.  The swap path must keep the old data
+        restorable when the final rename fails, and heal the moved-aside
+        copy on the next save."""
+        old = {"a": jnp.arange(4.0)}
+        new = {"a": jnp.arange(4.0) * 10.0}
+        ck.save(str(tmp_path), 3, old)
+
+        step_dir = os.path.join(str(tmp_path), "step_00000003")
+        real_rename = os.rename
+
+        def failing_rename(src, dst):
+            if dst == step_dir and os.path.basename(src).startswith(".tmp_"):
+                raise OSError("simulated crash mid-swap")
+            return real_rename(src, dst)
+
+        monkeypatch.setattr(os, "rename", failing_rename)
+        with pytest.raises(OSError, match="mid-swap"):
+            ck.save(str(tmp_path), 3, new)
+        monkeypatch.undo()
+
+        # the old checkpoint survived the crash window
+        out, _ = ck.restore(str(tmp_path), old, step=3)
+        np.testing.assert_array_equal(np.asarray(out["a"]),
+                                      np.asarray(old["a"]))
+        # no trash/tmp leakage into the step listing, and a clean
+        # overwrite still works afterwards
+        ck.cleanup(str(tmp_path), keep=5)
+        out, _ = ck.restore(str(tmp_path), old, step=3)
+        np.testing.assert_array_equal(np.asarray(out["a"]),
+                                      np.asarray(old["a"]))
+        ck.save(str(tmp_path), 3, new)
+        out, _ = ck.restore(str(tmp_path), new, step=3)
+        np.testing.assert_array_equal(np.asarray(out["a"]),
+                                      np.asarray(new["a"]))
+
+    def test_interrupted_swap_healed_on_next_save(self, tmp_path):
+        """A crash AFTER the old dir moved aside but BEFORE the new rename
+        leaves only the dot-prefixed trash copy; the next save must put it
+        back before swapping (so a concurrent restore never 404s)."""
+        old = {"a": jnp.arange(3.0)}
+        ck.save(str(tmp_path), 1, old)
+        step_dir = os.path.join(str(tmp_path), "step_00000001")
+        trash = os.path.join(str(tmp_path), ".old_step_00000001")
+        os.rename(step_dir, trash)   # simulate the crash state
+        new = {"a": jnp.arange(3.0) + 5.0}
+        ck.save(str(tmp_path), 1, new)
+        assert not os.path.exists(trash)
+        out, _ = ck.restore(str(tmp_path), new, step=1)
+        np.testing.assert_array_equal(np.asarray(out["a"]),
+                                      np.asarray(new["a"]))
+
     def test_restart_equivalence(self, tmp_path):
         """Train N steps straight == train, crash, resume (same losses)."""
         from repro.launch.train import build_argparser, run

@@ -165,3 +165,23 @@ def test_star_grouped_model_golden_trace(seed):
 def test_meta_reports_events():
     new, _ = run_both(0, "fifo", num_ps=1)
     assert new.meta["num_events"] > 0
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+@pytest.mark.parametrize("num_ps", [1, 2])
+def test_empty_fault_spec_keeps_golden_traces(seed, num_ps):
+    """Fault-injection gate: an empty ``FaultSpec`` must leave the engine
+    on its untouched code path — still bit-identical to the frozen
+    reference engine (which predates fault injection entirely)."""
+    from repro.core.faults import FaultSpec
+    rng = random.Random(1234 + seed)
+    tpls = make_steps(rng, num_ps)
+    kw = dict(resources=ps_resources(BW, num_ps), link_policy="http2",
+              win=2.8e6, steps_per_worker=20, warmup_steps=5, seed=seed,
+              record_trace=True, record_op_times=True, service_jitter=0.12,
+              stall_alpha=2e-9, stall_rtt=1e-3)
+    if num_ps > 1:
+        kw["bandwidth_model"] = BandwidthModel()
+    new = Simulation(SimConfig(faults=FaultSpec(), **kw)).run(tpls, 3)
+    ref = ReferenceSimulation(SimConfig(**kw)).run(tpls, 3)
+    assert_equivalent(new, ref)

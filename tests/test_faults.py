@@ -1,0 +1,370 @@
+"""Fault-injection subsystem: worker churn, PS failover, degraded links.
+
+Acceptance gates:
+
+  * an empty :class:`FaultSpec` is provably inert — the DES engine and the
+    emulator produce bit-identical traces with and without it (the fault
+    schedule draws from a dedicated RNG stream, never the simulation's);
+  * the same spec + seed compiles to the same schedule everywhere, and a
+    seeded crash/restart run is bit-identical serial vs parallel sweep;
+  * a crash kills in-flight work (wasted), the restore pays the
+    checkpoint-cost model, and the step budget still completes on every
+    engine path (uniform equal-share, general waterfill, every sync mode);
+  * degradation epochs and PS failover lower throughput; the colocated
+    backup policy recovers faster than attaching a cold spare;
+  * goodput-under-churn agrees between the DES prediction and the cluster
+    emulator at the sync-mode validation tolerance (regime-ratio, rel=.25).
+"""
+import pytest
+
+from repro.core.events import Op, StepTemplate, Trace, ps_resources
+from repro.core.bandwidth import BandwidthModel
+from repro.core.faults import (CheckpointCostModel, FaultSpec, compile_faults,
+                               shard_link_names)
+from repro.core.simulator import SimConfig, Simulation
+
+BW = 1e8
+
+
+def small_tpls(num_ps=1):
+    if num_ps == 1:
+        ops = [Op("c0", "worker", duration=0.05),
+               Op("pull", "downlink", size=2e6),
+               Op("push", "uplink", size=2e6, deps=(0, 1))]
+    else:
+        links = [f"{d}:{p}" for d in ("downlink", "uplink")
+                 for p in range(num_ps)]
+        ops = [Op("c0", "worker", duration=0.05)] + [
+            Op(f"l{i}", links[i % len(links)], size=2e6, deps=(0,))
+            for i in range(len(links))]
+    return [StepTemplate(ops=ops)]
+
+
+def sim_kw(num_ps=1, **over):
+    kw = dict(resources=ps_resources(BW, num_ps), link_policy="http2",
+              win=2.8e6, steps_per_worker=30, warmup_steps=5, seed=3,
+              record_trace=True)
+    if num_ps > 1:
+        kw["bandwidth_model"] = BandwidthModel()
+    kw.update(over)
+    return kw
+
+
+def run(tpls, workers=4, **kw):
+    return Simulation(SimConfig(**sim_kw(**kw))).run(tpls, workers)
+
+
+# ---------------------------------------------------------------- validation
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="mttf"):
+        FaultSpec(mttf=-1.0)
+    with pytest.raises(ValueError, match="backup_policy"):
+        FaultSpec(backup_policy="raid")
+    with pytest.raises(ValueError, match="degrade_factor"):
+        FaultSpec(degrade_factor=1.5)
+    with pytest.raises(ValueError, match="degrade epoch"):
+        FaultSpec(degrade_epochs=((5.0, 2.0, "uplink", 0.5),))
+    with pytest.raises(ValueError, match="ckpt"):
+        FaultSpec(ckpt_interval_steps=-1)
+    with pytest.raises(ValueError, match="alpha"):
+        CheckpointCostModel(alpha=-1.0)
+
+
+def test_compile_validates_targets():
+    with pytest.raises(ValueError, match="shard"):
+        compile_faults(FaultSpec(ps_failures=((1.0, 3),)), 2, num_shards=2)
+    with pytest.raises(ValueError, match="unknown link"):
+        compile_faults(FaultSpec(degrade_epochs=((0.0, 1.0, "bogus", 0.5),)),
+                       2, link_names=("uplink", "downlink"))
+    with pytest.raises(ValueError, match="no 'downlink:1'"):
+        shard_link_names(1, {"downlink:0": None, "uplink:0": None})
+
+
+# ------------------------------------------------------- schedule compilation
+
+
+def test_compile_deterministic_and_seeded():
+    spec = FaultSpec(mttf=50.0, mttr=10.0, preempt_rate=0.01,
+                     degrade_links=("uplink",), degrade_factor=0.4,
+                     degrade_period=40.0, degrade_duration=10.0,
+                     horizon=500.0)
+    a = compile_faults(spec, 4, link_names=("uplink", "downlink"))
+    b = compile_faults(spec, 4, link_names=("uplink", "downlink"))
+    assert a.incidents == b.incidents
+    assert a.incidents   # stochastic processes actually fired
+    other = compile_faults(
+        FaultSpec(**{**spec.__dict__, "fault_seed": 9}), 4,
+        link_names=("uplink", "downlink"))
+    assert other.incidents != a.incidents
+    # sorted by t_down; every incident well-formed
+    downs = [e.t_down for e in a.incidents]
+    assert downs == sorted(downs)
+    assert all(e.t_up > e.t_down for e in a.incidents)
+
+
+def test_compile_drops_overlapping_incidents():
+    # the second crash begins while worker 0 is still down: dropped
+    spec = FaultSpec(crashes=((10.0, 0), (12.0, 0), (40.0, 0)), mttr=20.0)
+    sched = compile_faults(spec, 1)
+    assert [e.t_down for e in sched.incidents] == [10.0, 40.0]
+
+
+def test_restore_cost_in_recovery():
+    ck = CheckpointCostModel(alpha=1e-9, beta=2.0)
+    spec = FaultSpec(crashes=((5.0, 0),), mttr=10.0, ckpt=ck,
+                     model_bytes=1e9)
+    sched = compile_faults(spec, 1)
+    assert sched.incidents[0].recovery == pytest.approx(10.0 + 2.0 + 1.0)
+
+
+def test_checkpoint_cost_calibrate(tmp_path):
+    m = CheckpointCostModel.calibrate(str(tmp_path),
+                                      sizes=(1 << 10, 1 << 12, 1 << 14))
+    assert m.alpha >= 0.0 and m.beta >= 0.0
+    assert m.restore_cost(1e6) > 0.0
+
+
+# --------------------------------------------------------------- DES scenarios
+
+
+def test_empty_spec_is_inert():
+    tpls = small_tpls()
+    healthy = run(tpls)
+    empty = run(tpls, faults=FaultSpec())
+    assert empty.step_completions == healthy.step_completions
+    assert [r.end for r in empty.records] == [r.end for r in healthy.records]
+    assert empty.incidents == []
+
+
+@pytest.mark.parametrize("num_ps", [1, 2])
+def test_explicit_crash_recovers_and_completes(num_ps):
+    tpls = small_tpls(num_ps)
+    healthy = run(tpls, num_ps=num_ps)
+    T = healthy.meta["sim_end_time"]
+    spec = FaultSpec(crashes=((0.3 * T, 0),), mttr=0.2 * T,
+                     horizon=100.0 * T)
+    faulted = run(tpls, num_ps=num_ps, faults=spec)
+    assert len(faulted.step_completions) == len(healthy.step_completions)
+    assert faulted.meta["sim_end_time"] > T
+    (inc,) = faulted.incidents
+    assert inc["kind"] == "crash" and inc["target"] == 0
+    assert inc["recovery"] == pytest.approx(
+        0.2 * T + spec.restore_cost())
+    assert faulted.meta["lost_steps"] >= 0
+    assert faulted.throughput(8, warmup_steps=5) < \
+        healthy.throughput(8, warmup_steps=5)
+
+
+def test_crash_trace_identical_serial_vs_parallel():
+    from repro.core.sweep import simulate_all
+    tpls = small_tpls()
+    spec = FaultSpec(mttf=1.5, mttr=0.5, fault_seed=2, horizon=1e4)
+    tasks = [(SimConfig(**sim_kw(seed=3 + i, faults=spec)), tpls, 4, 8, 5)
+             for i in range(3)]
+    serial = simulate_all(tasks, parallel=False)
+    parallel = simulate_all(tasks, parallel=True, max_workers=2)
+    assert serial == parallel
+
+
+@pytest.mark.parametrize("mode,kw", [
+    ("sync", {}), ("sync", {"backup_workers": 1}),
+    ("ssp", {"staleness_bound": 2}), ("allreduce", {})])
+def test_sync_modes_survive_crash(mode, kw):
+    tpls = small_tpls()
+    healthy = run(tpls, sync_mode=mode, **kw)
+    T = healthy.meta["sim_end_time"]
+    spec = FaultSpec(crashes=((0.3 * T, 0),), mttr=0.3 * T,
+                     horizon=100.0 * T)
+    faulted = run(tpls, sync_mode=mode, faults=spec, **kw)
+    # no deadlock: the budget completes even with the barrier's straggler
+    # down (quorum re-election) or the SSP floor frozen at a dead worker
+    assert len(faulted.step_completions) == len(healthy.step_completions)
+    assert faulted.meta["num_incidents"] == 1
+
+
+def test_barrier_backup_drops_stale_restart_gradient():
+    tpls = small_tpls()
+    healthy = run(tpls, sync_mode="sync", backup_workers=1)
+    T = healthy.meta["sim_end_time"]
+    spec = FaultSpec(crashes=((0.3 * T, 0),), mttr=0.3 * T,
+                     horizon=100.0 * T)
+    faulted = run(tpls, sync_mode="sync", backup_workers=1, faults=spec)
+    # with a backup, the barrier commits past the down worker, so its
+    # in-flight gradient goes stale -> wasted work is recorded
+    assert faulted.meta["wasted_work_s"] > 0.0
+    assert faulted.goodput(8, warmup_steps=5) <= \
+        faulted.throughput(8, warmup_steps=5)
+
+
+@pytest.mark.parametrize("num_ps", [1, 2])
+def test_degrade_epoch_slows_both_paths(num_ps):
+    tpls = small_tpls(num_ps)
+    healthy = run(tpls, num_ps=num_ps)
+    T = healthy.meta["sim_end_time"]
+    lname = "uplink" if num_ps == 1 else "uplink:0"
+    spec = FaultSpec(degrade_epochs=((0.1 * T, 0.9 * T, lname, 0.25),),
+                     horizon=100.0 * T)
+    faulted = run(tpls, num_ps=num_ps, faults=spec)
+    assert faulted.meta["sim_end_time"] > T
+    assert len(faulted.step_completions) == len(healthy.step_completions)
+    (inc,) = faulted.incidents
+    assert inc["kind"] == "degrade" and inc["factor"] == 0.25
+
+
+def test_ps_failover_colocated_cheaper_than_spare():
+    tpls = small_tpls(2)
+    healthy = run(tpls, num_ps=2)
+    T = healthy.meta["sim_end_time"]
+    end = {}
+    for policy in ("spare", "colocated"):
+        spec = FaultSpec(ps_failures=((0.4 * T, 1),), backup_policy=policy,
+                         failover_spare=2.0 * T, failover_colocated=0.5 * T,
+                         horizon=100.0 * T)
+        tr = run(tpls, num_ps=2, faults=spec)
+        assert len(tr.step_completions) == len(healthy.step_completions)
+        (inc,) = tr.incidents
+        assert inc["kind"] == "ps_fail" and inc["target"] == 1
+        end[policy] = tr.meta["sim_end_time"]
+    lost_spare = end["spare"] - T
+    lost_colocated = end["colocated"] - T
+    assert lost_colocated > 0.0
+    assert lost_spare >= 2.0 * lost_colocated
+
+
+def test_link_events_need_incremental_waterfill():
+    tpls = small_tpls(2)
+    spec = FaultSpec(degrade_epochs=((1.0, 2.0, "uplink:0", 0.5),))
+    cfg = SimConfig(**sim_kw(num_ps=2, waterfill="batch", faults=spec))
+    with pytest.raises(ValueError, match="incremental"):
+        Simulation(cfg).run(tpls, 4)
+
+
+# --------------------------------------------------- incident-aware windowing
+
+
+def make_restart_trace():
+    """Synthetic 2-worker trace: worker 0 crashes at t=10 after 5 steps
+    and resumes at t=30; worker 1 completes a step each second."""
+    tr = Trace()
+    for i in range(5):
+        tr.complete_step(0, i, 2.0 * (i + 1))          # steps at 2,4,..10
+    for i in range(5, 10):
+        tr.complete_step(0, i, 30.0 + 2.0 * (i - 4))   # resumes at 32..40
+    for i in range(40):
+        tr.complete_step(1, i, 1.0 * (i + 1))          # steps at 1..40
+    tr.incidents.append({"kind": "crash", "target": 0, "t_down": 10.0,
+                         "t_up": 30.0, "recovery": 20.0, "in_step": False})
+    return tr
+
+
+def test_measurement_window_capped_at_first_incident():
+    tr = make_restart_trace()
+    # warmup 8 > the 5 pre-crash steps of worker 0: without the cap the
+    # boundary would slide to its 8th completion at t=36, past the churn
+    w0, w1 = tr.measurement_window(warmup_steps=8)
+    assert w0 == 10.0    # capped at worker 0's t_down
+    assert w1 == 40.0
+    # windows ignoring incidents would miss the outage entirely
+    tr2 = make_restart_trace()
+    tr2.incidents.clear()
+    w0_blind, _ = tr2.measurement_window(warmup_steps=8)
+    assert w0_blind == 36.0
+
+
+def test_goodput_excludes_dropped_stale_updates():
+    tr = make_restart_trace()
+    tr.meta = {"sync_mode": "sync"}
+    tr.staleness = [0] * len(tr.step_completions)
+    tr.staleness[7] = 3   # one dropped gradient inside the window
+    g = tr.goodput(1, warmup_steps=8)
+    t = tr.throughput(1, warmup_steps=8)
+    assert g < t
+    # async applies every update: goodput == throughput
+    tr.meta = {"sync_mode": "async"}
+    assert tr.goodput(1, warmup_steps=8) == t
+
+
+def test_wasted_work_fraction_reads_meta():
+    tr = Trace()
+    tr.meta = {"useful_work_s": 9.0, "wasted_work_s": 1.0}
+    assert tr.wasted_work_fraction() == pytest.approx(0.1)
+    assert Trace().wasted_work_fraction() == 0.0
+
+
+# ------------------------------------------------------------- emulator replay
+
+
+class TestEmulatorChurn:
+    def _emu(self, faults=None, sync=None, seed=5, steps=30):
+        from repro.core.paper_models import PAPER_DNNS, PLATFORMS
+        from repro.emulator.cluster import ClusterEmulator
+        emu = ClusterEmulator(PAPER_DNNS["alexnet"], 8,
+                              PLATFORMS["private_cpu"], num_workers=3,
+                              seed=seed, sync=sync, faults=faults)
+        emu.run(steps_per_worker=steps, horizon=1e9)
+        return emu
+
+    def test_empty_spec_inert_on_emulator(self):
+        healthy = self._emu()
+        empty = self._emu(faults=FaultSpec())
+        assert empty.step_completion_times == healthy.step_completion_times
+
+    def test_crash_replay_recovers(self):
+        healthy = self._emu()
+        T = healthy.t
+        spec = FaultSpec(crashes=((0.3 * T, 0),), mttr=0.2 * T,
+                         horizon=100.0 * T)
+        emu = self._emu(faults=spec)
+        assert [c for c in emu.completed_steps] == \
+            [c for c in healthy.completed_steps]
+        (inc,) = emu.incidents
+        assert inc["kind"] == "crash" and inc["target"] == 0
+        assert emu.t > T
+        assert emu.goodput(warmup_steps=5) <= emu.throughput(warmup_steps=5)
+
+    def test_goodput_under_churn_matches_prediction(self):
+        """DES-vs-emulator validation: the *relative* goodput cost of one
+        crash must agree at the sync-mode regime-ratio tolerance."""
+        from repro.core.predictor import PredictionRun
+        # warmup 10 of 80 steps: the crash (at 30% of the healthy run)
+        # lands AFTER every worker's warmup boundary, so the healthy and
+        # churned measurement windows are directly comparable
+        base = PredictionRun(dnn="alexnet", batch_size=8,
+                             platform="private_cpu", profile_steps=12,
+                             sim_steps=80, warmup_steps=10).prepare()
+        # scale the incident to each engine's own healthy timeline
+        cfg, tpls, W, _b, _w = base.prediction_tasks(2, 1)[0]
+        T_sim = Simulation(cfg).run(tpls, W).meta["sim_end_time"]
+        healthy_emu = self._emu(seed=base.seed + 1000, steps=40)
+        T_emu = healthy_emu.t * 40.0 / healthy_emu.steps_target  # per step
+        import dataclasses
+        sim_spec = FaultSpec(crashes=((0.3 * T_sim, 0),), mttr=0.2 * T_sim,
+                             horizon=100.0 * T_sim)
+        churn = dataclasses.replace(base, faults=sim_spec)
+        churn_rep = churn.robustness_report(2)
+        pred_ratio = churn_rep["goodput"] / base.predict(2, n_runs=1)
+        T40 = T_emu * 40.0
+        emu_spec = FaultSpec(crashes=((0.3 * T40, 0),), mttr=0.2 * T40,
+                             horizon=100.0 * T40)
+        from repro.core.paper_models import PAPER_DNNS, PLATFORMS
+        from repro.emulator.cluster import ClusterEmulator
+        def measure(faults):
+            emu = ClusterEmulator(PAPER_DNNS["alexnet"], 8,
+                                  PLATFORMS["private_cpu"], num_workers=2,
+                                  seed=base.seed + 1000, faults=faults)
+            emu.run(steps_per_worker=40, horizon=1e9)
+            return emu.goodput(warmup_steps=5)
+        meas_ratio = measure(emu_spec) / measure(None)
+        assert pred_ratio < 1.0          # churn must cost goodput
+        assert pred_ratio == pytest.approx(meas_ratio, rel=0.25)
+
+    def test_sweep_measure_carries_faults(self):
+        from repro.core.sweep import measure_task
+        spec = FaultSpec(crashes=((50.0, 0),), mttr=20.0, horizon=1e6)
+        args = ("alexnet", 8, "private_cpu", 2, 1, 20, 7, True, "profiled",
+                5, None, None, spec)
+        v_faulted = measure_task(args)
+        v_healthy = measure_task(args[:-1] + (None,))
+        assert v_faulted != v_healthy

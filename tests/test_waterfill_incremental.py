@@ -194,7 +194,13 @@ def test_invariant_mode_catches_corruption():
     for c in universe[:6]:
         iwf.add(c)
     iwf.flush()
-    victim = next(iter(iwf.shares))
+    # poison a conn in a DIFFERENT component than the upcoming arrival:
+    # the incremental flush must then leave the bad share in place for
+    # the invariant check to catch (a victim inside the re-solved
+    # component would be silently healed by the solve itself)
+    victim = universe[0]
+    assert not set(model.conn_groups(victim)) \
+        & set(model.conn_groups(universe[6]))
     iwf.shares[victim] *= 0.5          # simulate a stale/corrupt share
     iwf.add(universe[6])
     with pytest.raises(AssertionError, match="diverged"):
