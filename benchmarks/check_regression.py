@@ -48,10 +48,27 @@ DEFAULT_REPORT = os.path.join(
     os.path.dirname(__file__), "results", "regression_report.json"
 )
 
+# every record-bearing section a benchmark json can carry; a committed
+# baseline section that a fresh CI run fails to produce is a hard error
+# (a silently dropped section would pass the gate with zero coverage)
+SECTION_NAMES = ("workloads", "general", "syncmode", "faults", "batched")
+
 
 def load(path: str) -> dict:
     with open(path) as f:
         return json.load(f)
+
+
+def missing_sections(base: dict, ci: dict, sections: set | None) -> list[str]:
+    """Sections present (non-empty) in the committed baseline but absent
+    or empty in the CI run — restricted to ``sections`` when given."""
+    out = []
+    for name in SECTION_NAMES:
+        if sections is not None and name not in sections:
+            continue
+        if base.get(name) and not ci.get(name):
+            out.append(name)
+    return out
 
 
 def records(bench: dict) -> dict:
@@ -158,7 +175,54 @@ def incr_rows(base: dict, samples: list[dict]) -> list[dict]:
     return rows
 
 
-def rerun(fast: bool, skip_ref: bool) -> dict:
+def batched_records(bench: dict) -> dict:
+    """(section, key) -> record for the batched-engine section.  Kept out
+    of :func:`records` on purpose: batched records carry no ``speedup``
+    column, and folding them into the shared key set would force
+    ``pick_metric('auto')`` down to raw events/s for every section."""
+    out = {}
+    for rec in bench.get("batched", []):
+        out[("batched", rec["mode"], rec["W"])] = rec
+    return out
+
+
+def batched_rows(base: dict, samples: list[dict]) -> list[dict]:
+    """Batched-section rows gating ``batch_speedup`` — the lockstep
+    engine's events/s over the scalar engine's, measured interleaved in
+    one process (machine-independent, like ``incr_speedup``).  Older
+    baselines without the section simply produce no rows."""
+    base_recs = batched_records(base)
+    sample_recs = [batched_records(s) for s in samples]
+    rows = []
+    for key, brec in sorted(base_recs.items()):
+        bval = brec.get("batch_speedup")
+        if not bval:
+            continue
+        vals = []
+        for recs in sample_recs:
+            if key in recs:
+                v = recs[key].get("batch_speedup")
+                if v is not None:
+                    vals.append(v)
+        if not vals or len(vals) < len(sample_recs):
+            continue
+        ci_val = statistics.median(vals)
+        rows.append(
+            {
+                "section": key[0],
+                "workload": key[1],
+                "W": key[2],
+                "metric": "batch_speedup",
+                "baseline": bval,
+                "ci": ci_val,
+                "samples": vals,
+                "ratio": ci_val / bval,
+            }
+        )
+    return rows
+
+
+def rerun(fast: bool, skip_ref: bool, sections: list[str] | None = None) -> dict:
     """One more in-process benchmark sample, written to a throwaway path
     so the committed baseline is never touched.  ``fast`` must match the
     first sample's mode: a fast rerun of a full sample would cover fewer
@@ -169,7 +233,9 @@ def rerun(fast: bool, skip_ref: bool) -> dict:
     fd, path = tempfile.mkstemp(suffix=".json", prefix="bench_rerun_")
     os.close(fd)
     try:
-        return perf_sim.run(fast=fast, skip_ref=skip_ref, out_path=path)
+        return perf_sim.run(
+            fast=fast, skip_ref=skip_ref, out_path=path, sections=sections
+        )
     finally:
         os.unlink(path)
 
@@ -196,35 +262,66 @@ def main() -> None:
         choices=["auto", "speedup", "events_per_s"],
         default="auto",
     )
+    ap.add_argument(
+        "--sections",
+        default=None,
+        help="comma-separated section names: restrict both the comparison "
+        "and the missing-section check (e.g. 'batched' for the batched "
+        "smoke job)",
+    )
     ap.add_argument("--report", default=DEFAULT_REPORT)
     args = ap.parse_args()
+
+    sections = None
+    if args.sections is not None:
+        sections = {s.strip() for s in args.sections.split(",") if s.strip()}
+        unknown = sections - set(SECTION_NAMES)
+        if unknown:
+            ap.error(
+                f"unknown sections {sorted(unknown)} "
+                f"(choose from {SECTION_NAMES})"
+            )
+
+    def wanted(name: str) -> bool:
+        return sections is None or name in sections
 
     base = load(args.baseline)
     samples = [load(args.ci)]
     metric = pick_metric(args.metric, base, samples[0])
     floor = 1.0 - args.threshold
 
-    rows = compare(base, samples, metric)
-    if not rows:
+    missing = missing_sections(base, samples[0], sections)
+    if missing:
+        print(
+            f"# MISSING SECTIONS: the committed baseline {args.baseline} "
+            f"has {missing} but the CI run {args.ci} produced no records "
+            f"for them — the benchmark silently lost coverage (did a "
+            f"perf_sim section get renamed or skipped?)"
+        )
+        sys.exit(1)
+
+    def section_rows(sams: list[dict]) -> list[dict]:
+        return [r for r in compare(base, sams, metric) if wanted(r["section"])]
+
+    rows = section_rows(samples)
+    irows = incr_rows(base, samples) if wanted("general") else []
+    brows = batched_rows(base, samples) if wanted("batched") else []
+    if not rows and not irows and not brows:
         print(
             f"# no comparable records between {args.baseline} and "
             f"{args.ci}; nothing to gate"
         )
         sys.exit(0)
 
-    def verdict_ratio(rs: list[dict]) -> float:
-        return statistics.median(r["ratio"] for r in rs)
-
-    def incr_verdict(rs: list[dict]) -> float | None:
+    def verdict_ratio(rs: list[dict]) -> float | None:
         return statistics.median(r["ratio"] for r in rs) if rs else None
 
-    irows = incr_rows(base, samples)
-
     def needs_rerun() -> bool:
-        if verdict_ratio(rows) < floor:
-            return True
-        iv = incr_verdict(irows)
-        return iv is not None and iv < floor
+        for rs in (rows, irows, brows):
+            v = verdict_ratio(rs)
+            if v is not None and v < floor:
+                return True
+        return False
 
     while needs_rerun() and len(samples) <= args.reruns:
         print(
@@ -236,39 +333,54 @@ def main() -> None:
             rerun(
                 fast=samples[0].get("fast", True),
                 skip_ref=metric == "events_per_s",
+                sections=sorted(sections) if sections is not None else None,
             )
         )
-        new_rows = compare(base, samples, metric)
-        if not new_rows:
-            print("# rerun shares no records with the baseline; keeping prior verdict")
+        new_rows = section_rows(samples)
+        new_irows = incr_rows(base, samples) if wanted("general") else []
+        new_brows = batched_rows(base, samples) if wanted("batched") else []
+        if not new_rows and not new_irows and not new_brows:
+            print(
+                "# rerun shares no records with the baseline; "
+                "keeping prior verdict"
+            )
             break
-        rows = new_rows
-        irows = incr_rows(base, samples)
+        rows, irows, brows = new_rows, new_irows, new_brows
 
     median_ratio = verdict_ratio(rows)
-    worst = min(rows, key=lambda r: r["ratio"])
-    incr_median = incr_verdict(irows)
+    worst = min(rows, key=lambda r: r["ratio"]) if rows else None
+    incr_median = verdict_ratio(irows)
     incr_failed = incr_median is not None and incr_median < floor
-    failed = median_ratio < floor or incr_failed
-    print(f"section,workload,W,{metric}_base,{metric}_ci,ratio")
-    for r in rows:
-        print(
-            f"{r['section']},{r['workload']},{r['W']},"
-            f"{r['baseline']:.3g},{r['ci']:.3g},{r['ratio']:.3f}"
-        )
-    if irows:
-        print("section,workload,W,incr_speedup_base,incr_speedup_ci,ratio")
-        for r in irows:
+    batched_median = verdict_ratio(brows)
+    batched_failed = batched_median is not None and batched_median < floor
+    failed = (
+        (median_ratio is not None and median_ratio < floor)
+        or incr_failed
+        or batched_failed
+    )
+    if rows:
+        print(f"section,workload,W,{metric}_base,{metric}_ci,ratio")
+        for r in rows:
             print(
                 f"{r['section']},{r['workload']},{r['W']},"
                 f"{r['baseline']:.3g},{r['ci']:.3g},{r['ratio']:.3f}"
             )
+    for extra in (irows, brows):
+        if extra:
+            m = extra[0]["metric"]
+            print(f"section,workload,W,{m}_base,{m}_ci,ratio")
+            for r in extra:
+                print(
+                    f"{r['section']},{r['workload']},{r['W']},"
+                    f"{r['baseline']:.3g},{r['ci']:.3g},{r['ratio']:.3f}"
+                )
 
     report = {
         "baseline": args.baseline,
         "ci": args.ci,
         "metric": metric,
         "threshold": args.threshold,
+        "sections": sorted(sections) if sections is not None else None,
         "samples": len(samples),
         "rows": rows,
         "median_ratio": median_ratio,
@@ -276,6 +388,9 @@ def main() -> None:
         "incr_rows": irows,
         "incr_median_ratio": incr_median,
         "incr_failed": incr_failed,
+        "batched_rows": brows,
+        "batched_median_ratio": batched_median,
+        "batched_failed": batched_failed,
         "failed": failed,
     }
     os.makedirs(os.path.dirname(args.report) or ".", exist_ok=True)
@@ -290,17 +405,34 @@ def main() -> None:
             f"incr_speedup ratio {incr_median:.2f}x of baseline "
             f"(floor {floor:.2f}, {len(irows)} record(s))"
         )
-    if failed:
+    if batched_median is not None:
+        state = "REGRESSION" if batched_failed else "OK"
         print(
-            f"# PERF REGRESSION: median {metric} ratio {median_ratio:.2f}x "
-            f"of baseline (floor {floor:.2f}, {len(samples)} sample(s); "
+            f"# batched-engine gate {state}: batched-section median "
+            f"batch_speedup ratio {batched_median:.2f}x of baseline "
+            f"(floor {floor:.2f}, {len(brows)} record(s))"
+        )
+    if failed:
+        where = (
             f"worst record {worst['section']}/{worst['workload']}/"
-            f"W={worst['W']} at {worst['ratio']:.2f}x)"
+            f"W={worst['W']} at {worst['ratio']:.2f}x"
+            if worst is not None
+            else "see section gates above"
+        )
+        ratio_txt = (
+            f"{median_ratio:.2f}x" if median_ratio is not None else "n/a"
+        )
+        print(
+            f"# PERF REGRESSION: median {metric} ratio {ratio_txt} "
+            f"of baseline (floor {floor:.2f}, {len(samples)} sample(s); "
+            f"{where})"
         )
         sys.exit(1)
+    ratio_txt = f"{median_ratio:.2f}x" if median_ratio is not None else "n/a"
+    worst_txt = f"{worst['ratio']:.2f}x" if worst is not None else "n/a"
     print(
-        f"# perf gate OK: median {metric} ratio {median_ratio:.2f}x "
-        f"(floor {floor:.2f}; worst record {worst['ratio']:.2f}x)"
+        f"# perf gate OK: median {metric} ratio {ratio_txt} "
+        f"(floor {floor:.2f}; worst record {worst_txt})"
     )
 
 

@@ -15,6 +15,7 @@ import argparse
 import json
 import os
 import random
+import statistics
 import time
 
 from repro.core.bandwidth import BandwidthModel
@@ -86,16 +87,41 @@ def time_engine(sim_cls, tpls, cfg_fn, num_workers: int, reps: int):
     return best, events, tput
 
 
+ALL_SECTIONS = ("workloads", "general", "syncmode", "faults", "batched",
+                "sweep")
+
+
 def run(fast: bool = False, skip_ref: bool = False,
-        out_path: str = DEFAULT_OUT) -> dict:
+        out_path: str = DEFAULT_OUT, sections=None) -> dict:
+    """``sections`` (iterable of names from :data:`ALL_SECTIONS`) restricts
+    the run; the output json then only contains those sections, so pair a
+    restricted run with ``check_regression --sections``."""
+    if sections is not None:
+        sections = set(sections)
+        unknown = sections - set(ALL_SECTIONS)
+        if unknown:
+            raise ValueError(f"unknown sections {sorted(unknown)} "
+                             f"(choose from {ALL_SECTIONS})")
+
+    def want(name: str) -> bool:
+        return sections is None or name in sections
+
     reps = 1 if fast else 3
     sizes = SIZES[:2] if fast else SIZES
     workers = WORKER_COUNTS[:3] if fast else WORKER_COUNTS
-    out = {"bench": "perf_sim", "cpus": default_pool_size(),
-           "fast": fast, "workloads": [], "sweep": {}}
+    ncpu = default_pool_size()
+    out = {"bench": "perf_sim", "cpus": ncpu, "fast": fast}
+    # every record carries the cpu count and the engine that produced it,
+    # so a committed BENCH json documents its own measurement conditions
+    scalar_meta = {"cpus": ncpu, "engine": "scalar"}
 
-    print("workload,ops,W,engine_s,ref_s,speedup,events,events_per_s")
-    for name, layers, steps in sizes:
+    if not want("workloads"):
+        sizes_w = ()
+    else:
+        sizes_w = sizes
+        out["workloads"] = []
+        print("workload,ops,W,engine_s,ref_s,speedup,events,events_per_s")
+    for name, layers, steps in sizes_w:
         tpls = [make_template(layers, seed=s) for s in range(3)]
         nops = len(tpls[0].ops)
         sp = steps // 4 if fast else steps
@@ -114,7 +140,8 @@ def run(fast: bool = False, skip_ref: bool = False,
                    "engine_s": t_new, "ref_s": t_ref,
                    "speedup": (t_ref / t_new) if t_ref else None,
                    "events": events, "events_per_s": events / t_new,
-                   "throughput": tput_new, "throughput_ref": tput_ref}
+                   "throughput": tput_new, "throughput_ref": tput_ref,
+                   **scalar_meta}
             out["workloads"].append(rec)
             print(f"{name},{nops},{w},{t_new:.3f},"
                   f"{t_ref if t_ref is None else round(t_ref, 3)},"
@@ -134,14 +161,17 @@ def run(fast: bool = False, skip_ref: bool = False,
     tpls2 = [make_template(layers, seed=s, num_ps=2) for s in range(3)]
     wmax = workers[-1]
     topo = Topology.racked(wmax, 2, racks=2, oversubscription=4.0)
-    general_cases = (
-        ("2ps_waterfill", dict(num_ps=2, bandwidth_model=BandwidthModel())),
-        ("2ps_topology", dict(num_ps=2, topology=topo,
-                              bandwidth_model=topo.grouped_model())),
-    )
-    out["general"] = []
-    print("general,mode,W,engine_s,batch_s,ref_s,speedup,incr_speedup,"
-          "events,events_per_s")
+    general_cases = ()
+    if want("general"):
+        general_cases = (
+            ("2ps_waterfill",
+             dict(num_ps=2, bandwidth_model=BandwidthModel())),
+            ("2ps_topology", dict(num_ps=2, topology=topo,
+                                  bandwidth_model=topo.grouped_model())),
+        )
+        out["general"] = []
+        print("general,mode,W,engine_s,batch_s,ref_s,speedup,incr_speedup,"
+              "events,events_per_s")
     for mode, kw in general_cases:
         for w in workers:
             def cfg_fn(rep, kw=kw):
@@ -167,7 +197,8 @@ def run(fast: bool = False, skip_ref: bool = False,
                    "speedup": (t_ref / t_new) if t_ref else None,
                    "incr_speedup": t_batch / t_new,
                    "events": events, "events_per_s": events / t_new,
-                   "throughput": tput_new, "throughput_ref": tput_ref}
+                   "throughput": tput_new, "throughput_ref": tput_ref,
+                   **scalar_meta}
             out["general"].append(rec)
             print(f"general,{mode},{w},{t_new:.3f},{t_batch:.3f},"
                   f"{t_ref if t_ref is None else round(t_ref, 3)},"
@@ -185,14 +216,16 @@ def run(fast: bool = False, skip_ref: bool = False,
     name, layers, steps = sizes[min(1, len(sizes) - 1)]
     sp = steps // 4 if fast else steps
     tpls_sync = [make_template(layers, seed=s) for s in range(3)]
-    sync_cases = (
-        ("sync", dict(sync_mode="sync")),
-        ("sync_backup", dict(sync_mode="sync", backup_workers=1)),
-        ("ssp", dict(sync_mode="ssp", staleness_bound=2)),
-        ("allreduce", dict(sync_mode="allreduce")),
-    )
-    out["syncmode"] = []
-    print("syncmode,mode,W,engine_s,ref_s,speedup,events,events_per_s")
+    sync_cases = ()
+    if want("syncmode"):
+        sync_cases = (
+            ("sync", dict(sync_mode="sync")),
+            ("sync_backup", dict(sync_mode="sync", backup_workers=1)),
+            ("ssp", dict(sync_mode="ssp", staleness_bound=2)),
+            ("allreduce", dict(sync_mode="allreduce")),
+        )
+        out["syncmode"] = []
+        print("syncmode,mode,W,engine_s,ref_s,speedup,events,events_per_s")
     for mode, kw in sync_cases:
         for w in workers:
             if kw.get("backup_workers", 0) >= w:
@@ -221,7 +254,8 @@ def run(fast: bool = False, skip_ref: bool = False,
                    "ref_s": t_ref,
                    "speedup": (t_ref / t_new) if t_ref else None,
                    "events": events, "events_per_s": events / t_new,
-                   "throughput": tput_new, "throughput_ref": tput_ref}
+                   "throughput": tput_new, "throughput_ref": tput_ref,
+                   **scalar_meta}
             out["syncmode"].append(rec)
             print(f"syncmode,{mode},{w},{t_new:.3f},"
                   f"{t_ref if t_ref is None else round(t_ref, 3)},"
@@ -239,16 +273,18 @@ def run(fast: bool = False, skip_ref: bool = False,
     name, layers, steps = sizes[min(1, len(sizes) - 1)]
     sp = steps // 4 if fast else steps
     tpls_f = [make_template(layers, seed=s) for s in range(3)]
-    fault_cases = (
-        ("churn", FaultSpec(mttf=20.0, mttr=2.0, horizon=600.0), {}),
-        ("churn_ssp", FaultSpec(mttf=20.0, mttr=2.0, horizon=600.0),
-         dict(sync_mode="ssp", staleness_bound=2)),
-        ("degrade", FaultSpec(degrade_links=("uplink",),
-                              degrade_factor=0.4, degrade_period=10.0,
-                              degrade_duration=4.0, horizon=600.0), {}),
-    )
-    out["faults"] = []
-    print("faults,mode,W,engine_s,ref_s,speedup,events,events_per_s")
+    fault_cases = ()
+    if want("faults"):
+        fault_cases = (
+            ("churn", FaultSpec(mttf=20.0, mttr=2.0, horizon=600.0), {}),
+            ("churn_ssp", FaultSpec(mttf=20.0, mttr=2.0, horizon=600.0),
+             dict(sync_mode="ssp", staleness_bound=2)),
+            ("degrade", FaultSpec(degrade_links=("uplink",),
+                                  degrade_factor=0.4, degrade_period=10.0,
+                                  degrade_duration=4.0, horizon=600.0), {}),
+        )
+        out["faults"] = []
+        print("faults,mode,W,engine_s,ref_s,speedup,events,events_per_s")
     for mode, spec, sync_kw in fault_cases:
         for w in workers:
             def cfg_fn(rep, spec=spec, sync_kw=sync_kw):
@@ -265,34 +301,87 @@ def run(fast: bool = False, skip_ref: bool = False,
                    "ref_s": t_ref,
                    "speedup": (t_ref / t_new) if t_ref else None,
                    "events": events, "events_per_s": events / t_new,
-                   "throughput": tput_new, "throughput_ref": tput_ref}
+                   "throughput": tput_new, "throughput_ref": tput_ref,
+                   **scalar_meta}
             out["faults"].append(rec)
             print(f"faults,{mode},{w},{t_new:.3f},"
                   f"{t_ref if t_ref is None else round(t_ref, 3)},"
                   f"{rec['speedup'] and round(rec['speedup'], 2)},"
                   f"{events},{events / t_new:.0f}", flush=True)
 
+    # batched scenario engine (repro.core.batched): many independent
+    # seeded scenarios in lockstep as stacked arrays vs the same scenarios
+    # run one-by-one on the scalar engine.  Scalar and batched timing
+    # windows are interleaved within every rep and the gate metric is the
+    # MEDIAN per-rep ratio: short scalar windows can swing ~2x with host
+    # noise, and a ratio taken inside one rep cancels the machine's speed
+    # of the moment.  check_regression.py gates "batch_speedup".
+    if want("batched"):
+        from repro.core.batched import Scenario, run_scenarios
+        # fast mode keeps the FULL batch size and only drops reps: the
+        # speedup grows with B (fixed per-batch costs amortize), so a
+        # smaller fast batch would gate CI against an incomparable number
+        B = 8192
+        nsub = 24 if fast else 48        # scalar baseline subset per rep
+        breps = 1 if fast else 3
+        spb, wb = 24, 4
+        tpls_b = [make_template(3, seed=0)]
+        scens = [Scenario(make_cfg(spb, seed=s), tpls_b, wb)
+                 for s in range(B)]
+        ratios, punted = [], 0
+        scalar_evs = batched_evs = 0.0
+        for _rep in range(breps):
+            t0 = time.perf_counter()
+            ev_s = 0
+            for sc in scens[:nsub]:
+                tr = Simulation(sc.cfg).run(sc.steps, sc.num_workers,
+                                            sample=sc.sample)
+                ev_s += tr.meta["num_events"]
+            dt_s = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            traces = run_scenarios(scens, engine="auto", max_batch=B)
+            dt_b = time.perf_counter() - t0
+            ev_b = sum(t.meta["num_events"] for t in traces)
+            punted = sum(1 for t in traces
+                         if t.meta.get("engine") == "scalar")
+            scalar_evs, batched_evs = ev_s / dt_s, ev_b / dt_b
+            ratios.append(batched_evs / scalar_evs)
+        rec = {"mode": "lockstep", "workload": "small", "W": wb, "B": B,
+               "steps_per_worker": spb,
+               "scalar_events_per_s": scalar_evs,
+               "events_per_s": batched_evs,
+               "batch_speedup": statistics.median(ratios),
+               "punted": punted, "cpus": ncpu, "engine": "batched"}
+        out["batched"] = [rec]
+        print(f"# batched: B={B} W={wb} scalar {scalar_evs:.0f} ev/s, "
+              f"batched {batched_evs:.0f} ev/s, "
+              f"median speedup {rec['batch_speedup']:.1f}x "
+              f"({punted} punted)")
+
     # figure-equivalent sweep: n_runs seeded sims per worker count, serial
     # in-process vs fanned across the pool (what the fig13/14/20/25
     # drivers now do)
-    name, layers, steps = sizes[min(1, len(sizes) - 1)]
-    tpls = [make_template(layers, seed=s) for s in range(3)]
-    sp = steps // 4 if fast else steps
-    tasks = [(make_cfg(sp, seed=101 * i + w), tpls, w, 32, 10)
-             for w in workers for i in range(3)]
-    t0 = time.perf_counter()
-    serial = [simulate_task(t) for t in tasks]
-    t_serial = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    par = parallel_map(simulate_task, tasks)
-    t_par = time.perf_counter() - t0
-    assert par == serial, "parallel sweep must be bit-identical to serial"
-    out["sweep"] = {"workload": name, "tasks": len(tasks),
-                    "serial_s": t_serial, "parallel_s": t_par,
-                    "speedup": t_serial / t_par}
-    print(f"# sweep: {len(tasks)} tasks serial {t_serial:.2f}s "
-          f"parallel {t_par:.2f}s ({t_serial / t_par:.2f}x on "
-          f"{out['cpus']} cores)")
+    if want("sweep"):
+        name, layers, steps = sizes[min(1, len(sizes) - 1)]
+        tpls = [make_template(layers, seed=s) for s in range(3)]
+        sp = steps // 4 if fast else steps
+        tasks = [(make_cfg(sp, seed=101 * i + w), tpls, w, 32, 10)
+                 for w in workers for i in range(3)]
+        t0 = time.perf_counter()
+        serial = [simulate_task(t) for t in tasks]
+        t_serial = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        par = parallel_map(simulate_task, tasks)
+        t_par = time.perf_counter() - t0
+        assert par == serial, \
+            "parallel sweep must be bit-identical to serial"
+        out["sweep"] = {"workload": name, "tasks": len(tasks),
+                        "serial_s": t_serial, "parallel_s": t_par,
+                        "speedup": t_serial / t_par, "cpus": ncpu,
+                        "engine": "scalar"}
+        print(f"# sweep: {len(tasks)} tasks serial {t_serial:.2f}s "
+              f"parallel {t_par:.2f}s ({t_serial / t_par:.2f}x on "
+              f"{out['cpus']} cores)")
 
     with open(out_path, "w") as f:
         json.dump(out, f, indent=1)
@@ -305,9 +394,14 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true", help="CI-sized run")
     ap.add_argument("--skip-ref", action="store_true",
                     help="skip the (slow) reference-engine baseline")
+    ap.add_argument("--section", action="append", dest="sections",
+                    metavar="NAME", choices=ALL_SECTIONS,
+                    help="run only this section (repeatable); the output "
+                         "json then only contains the chosen sections")
     ap.add_argument("--out", default=DEFAULT_OUT)
     args = ap.parse_args()
-    run(fast=args.fast, skip_ref=args.skip_ref, out_path=args.out)
+    run(fast=args.fast, skip_ref=args.skip_ref, out_path=args.out,
+        sections=args.sections)
 
 
 if __name__ == "__main__":

@@ -9,6 +9,7 @@ The roofline table additionally requires the dry-run artifact
 from __future__ import annotations
 
 import argparse
+import contextlib
 import sys
 import time
 import traceback
@@ -67,19 +68,26 @@ def main() -> None:
         ("roofline", lambda: roofline.run()),
     ]
 
+    from repro.core import sweep
+
     failures = []
     t_all = time.time()
-    for name, fn in jobs:
-        if only and name not in only:
-            continue
-        print(f"\n===== {name} =====", flush=True)
-        t0 = time.time()
-        try:
-            fn()
-        except Exception:
-            failures.append(name)
-            traceback.print_exc()
-        print(f"# {name} took {time.time() - t0:.1f}s", flush=True)
+    # --fast runs many small figure fans back to back: one ambient pool
+    # across the whole job list beats a fresh executor per simulate_all
+    # call (full runs keep per-figure pools — their fans are large enough
+    # to amortize startup, and isolation aids debugging)
+    with sweep.pool() if fast else contextlib.nullcontext():
+        for name, fn in jobs:
+            if only and name not in only:
+                continue
+            print(f"\n===== {name} =====", flush=True)
+            t0 = time.time()
+            try:
+                fn()
+            except Exception:
+                failures.append(name)
+                traceback.print_exc()
+            print(f"# {name} took {time.time() - t0:.1f}s", flush=True)
     print(f"\n# total {time.time() - t_all:.1f}s; "
           f"failures: {failures or 'none'}")
     if failures:

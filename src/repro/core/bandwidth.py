@@ -41,6 +41,8 @@ import os
 from typing import (Callable, Dict, FrozenSet, List, Mapping, Optional,
                     Sequence, Set, Tuple)
 
+import numpy as np
+
 # A connection is (worker, link_resource_name); shares are fractions of the
 # nominal link bandwidth B.
 Conn = Tuple[int, str]
@@ -177,6 +179,173 @@ def waterfill(conns: Sequence[Conn],
         comp_members = {k: sorted(set(members[k])) for k in keys}
         share.update(_fill(comp_conns, comp_caps, comp_members, weights))
     return share
+
+
+# ---------------------------------------------------------------------------
+# batched waterfill: stacked-array surrogate for scoring many problems at once
+# ---------------------------------------------------------------------------
+
+
+def stack_waterfill_problems(problems: Sequence[tuple]
+                             ) -> Tuple[List[list], np.ndarray, np.ndarray,
+                                        np.ndarray]:
+    """Pad independent waterfill problems into one stacked array problem.
+
+    ``problems`` is a sequence of ``(conns, caps, members)`` or ``(conns,
+    caps, members, weights)`` tuples exactly as :func:`waterfill` takes
+    them (e.g. straight from ``model.groups_for(conns)``).  Returns
+    ``(conn_lists, caps, members, weights)`` for :func:`batched_waterfill`:
+    ``conn_lists[b][j]`` names the connection behind column ``j`` of row
+    ``b``; group rows are padded with infinite-capacity empty groups and
+    connection columns with zero-weight phantoms, both of which the
+    batched solver provably ignores.
+    """
+    B = len(problems)
+    if B == 0:
+        raise ValueError("stack_waterfill_problems needs >= 1 problem")
+    C = max(len(p[0]) for p in problems)
+    G = max(len(p[1]) for p in problems)
+    caps = np.full((B, G), np.inf)
+    members = np.zeros((B, G, C), bool)
+    weights = np.zeros((B, C))
+    conn_lists: List[list] = []
+    for b, prob in enumerate(problems):
+        conns, pcaps, pmembers = prob[0], prob[1], prob[2]
+        pweights = prob[3] if len(prob) > 3 else None
+        col = {c: j for j, c in enumerate(conns)}
+        conn_lists.append(list(conns))
+        for j, c in enumerate(conns):
+            weights[b, j] = 1.0 if pweights is None else pweights[c]
+        for g, (key, cap) in enumerate(pcaps.items()):
+            caps[b, g] = cap
+            for c in pmembers[key]:
+                members[b, g, col[c]] = True
+        uncovered = ~members[b, :, :len(conns)].any(axis=0)
+        if uncovered.any():
+            c = conns[int(np.nonzero(uncovered)[0][0])]
+            raise ValueError(
+                f"problem {b}: connection {c!r} belongs to no capacity "
+                f"group; every connection needs at least one (its link's, "
+                f"typically)")
+    return conn_lists, caps, members, weights
+
+
+def _batched_fill_np(caps: np.ndarray, members: np.ndarray,
+                     weights: np.ndarray) -> np.ndarray:
+    """Vectorized progressive filling over ``B`` stacked problems.
+
+    The same raise/freeze loop as :func:`_fill`, advanced for all rows in
+    lockstep: each round raises every unfrozen connection by its row's
+    bottleneck headroom and freezes the members of newly saturated
+    groups.  At most ``G`` rounds freeze a group per row, so ``G + 1``
+    iterations always suffice; finished rows (no unsaturated group with
+    unfrozen members) degenerate to no-ops.
+    """
+    B, G, C = members.shape
+    mem_f = members.astype(np.float64)
+    share = np.zeros((B, C))
+    frozen = np.zeros((B, C), bool)
+    rem = caps.astype(np.float64).copy()
+    capfloor = _SAT_EPS * np.maximum(1.0, caps)
+    for _ in range(G + 1):
+        wu = np.where(frozen, 0.0, weights)
+        denom = np.einsum("bgc,bc->bg", mem_f, wu)
+        ok = denom > 0.0
+        if not ok.any():
+            break
+        with np.errstate(divide="ignore", invalid="ignore"):
+            delta_g = np.where(ok, rem / np.where(ok, denom, 1.0), np.inf)
+        delta = delta_g.min(axis=1)
+        d = np.where(np.isfinite(delta), delta, 0.0)
+        share += d[:, None] * wu
+        rem -= d[:, None] * denom
+        sat = rem <= capfloor
+        frozen |= (members & sat[:, :, None]).any(axis=1)
+    return share
+
+
+_JAX_FILL = None
+
+
+def _get_jax_fill():
+    """Build (once) the jitted+vmapped JAX fill.  Import is deferred so
+    the module stays importable without JAX installed."""
+    global _JAX_FILL
+    if _JAX_FILL is None:
+        import jax
+        import jax.numpy as jnp
+
+        def one(cap, mem, wt):
+            G = cap.shape[0]
+            capfloor = _SAT_EPS * jnp.maximum(1.0, cap)
+
+            def step(_, st):
+                share, fro, rem = st
+                wu = wt * (1.0 - fro)
+                denom = mem @ wu
+                ok = denom > 0.0
+                delta_g = jnp.where(ok, rem / jnp.where(ok, denom, 1.0),
+                                    jnp.inf)
+                delta = jnp.min(delta_g)
+                d = jnp.where(jnp.isfinite(delta), delta, 0.0)
+                share = share + d * wu
+                rem = rem - d * denom
+                sat = (rem <= capfloor).astype(mem.dtype)
+                fro = jnp.maximum(fro, jnp.minimum(mem.T @ sat, 1.0))
+                return share, fro, rem
+
+            init = (jnp.zeros_like(wt), jnp.zeros_like(wt), cap + 0.0)
+            share, _fro, _rem = jax.lax.fori_loop(0, G + 1, step, init)
+            return share
+
+        _JAX_FILL = jax.jit(jax.vmap(one))
+    return _JAX_FILL
+
+
+def batched_waterfill(caps: np.ndarray, members: np.ndarray,
+                      weights: Optional[np.ndarray] = None,
+                      backend: str = "numpy") -> np.ndarray:
+    """Max-min progressive filling over ``B`` stacked group problems.
+
+    Array form of :func:`waterfill` for scoring many *independent*
+    problems at once (placement-search surrogate pruning, fleet
+    what-ifs): ``caps[b, g]`` caps group ``g`` of problem ``b``,
+    ``members[b, g, c]`` marks connection column ``c`` as a member, and
+    the result ``[B, C]`` holds each connection's share.  Build the
+    stacked inputs with :func:`stack_waterfill_problems`.
+
+    ``backend="numpy"`` (default) runs the vectorized raise/freeze loop
+    in float64; it matches :func:`waterfill` to float-accumulation
+    tolerance (the scalar solver raises each connected component with its
+    own delta sequence, the batched one with the row-global bottleneck —
+    identical allocations in exact arithmetic, ~1e-12 relative in
+    floats).  ``backend="jax"`` runs the same arithmetic as a
+    ``jit``-compiled ``vmap`` over rows for accelerator offload; it
+    additionally computes in JAX's default precision (float32 unless
+    x64 is enabled), so treat its output as a *scoring surrogate* with
+    ~1e-4 relative tolerance, never as the bit-exact allocator
+    (:class:`IncrementalWaterfill` remains that).
+    """
+    if backend not in ("numpy", "jax"):
+        raise ValueError(
+            f"unknown backend {backend!r} (expected 'numpy' or 'jax')")
+    caps = np.asarray(caps, np.float64)
+    members = np.asarray(members, bool)
+    if members.ndim != 3 or caps.shape != members.shape[:2]:
+        raise ValueError(
+            f"shape mismatch: caps {caps.shape} vs members {members.shape} "
+            f"(want caps [B, G], members [B, G, C])")
+    if weights is None:
+        weights = np.ones((members.shape[0], members.shape[2]))
+    weights = np.asarray(weights, np.float64)
+    if weights.shape != (members.shape[0], members.shape[2]):
+        raise ValueError(
+            f"weights shape {weights.shape} != [B, C] "
+            f"{(members.shape[0], members.shape[2])}")
+    if backend == "jax":
+        fill = _get_jax_fill()
+        return np.asarray(fill(caps, members.astype(np.float64), weights))
+    return _batched_fill_np(caps, members, weights)
 
 
 class BandwidthModel:

@@ -14,7 +14,16 @@ searching over them.  Three strategies behind one API:
     shards), iterated to a fixpoint;
   * ``anneal``     — simulated-annealing refinement (single-shard moves
     and swaps under a geometric temperature schedule), seeded from the
-    greedy solution by default.
+    greedy solution by default;
+  * ``surrogate``  — enumerate the candidate space like ``exhaustive``
+    but score it with a *waterfill-only* throughput proxy first
+    (``bandwidth.batched_waterfill`` over the stacked per-candidate group
+    matrices — thousands of candidates per numpy call, no DES at all),
+    then spend full DES evaluation on the top ``1/surrogate_prune``
+    shortlist only.  The first concrete step on the datacenter-scale
+    scheduling roadmap item: ~``surrogate_prune``x fewer simulator runs
+    than full enumeration while (gated by ``benchmarks/fig_placement``)
+    returning the same chosen placement on the figure families.
 
 Every candidate is scored by the same objective the paper validates: the
 DES's predicted examples/s (proportional to updates/s at fixed batch
@@ -44,18 +53,24 @@ import random
 from dataclasses import dataclass
 from typing import (Callable, Dict, List, Optional, Sequence, Tuple)
 
-from .simulator import SimConfig
+import numpy as np
+
+from .bandwidth import (_direction_of, batched_waterfill,
+                        stack_waterfill_problems)
+from .events import LINK
+from .simulator import SimConfig, compile_template
 from .sweep import SimulationPool
 from .topology import Topology
 
 __all__ = [
     "PlacementEvaluator", "SearchResult", "search_placement",
     "evaluator_from_run", "evaluator_from_templates", "STRATEGIES",
+    "surrogate_scores",
 ]
 
 Hosts = Tuple[str, ...]
 
-STRATEGIES = ("exhaustive", "greedy", "anneal")
+STRATEGIES = ("exhaustive", "greedy", "anneal", "surrogate")
 
 # Exhaustive enumeration refuses beyond this many candidates: at that
 # point the cluster is exactly the regime greedy/anneal exist for.
@@ -211,6 +226,76 @@ def evaluator_from_templates(topology: Topology, templates: list,
                               parallel=parallel, max_workers=max_workers)
 
 
+# ----------------------------------------------------------- surrogate proxy
+
+
+def surrogate_scores(evaluator: PlacementEvaluator,
+                     candidates: Sequence[Hosts]) -> np.ndarray:
+    """Waterfill-only throughput proxy for every candidate placement.
+
+    No DES runs: each candidate's topology compiles to its capacity
+    groups, steady-state allocations for all candidates are solved in
+    batched :func:`bandwidth.batched_waterfill` calls, and a candidate's
+    score is the straggler-bound rate proxy
+
+        W / max_w (t_compute + sum_links work(link) / share(w, link))
+
+    over the evaluator's own step templates.  Two modelling choices make
+    the ranking track the DES:
+
+      * **phase split** — the download and upload halves of a step
+        alternate in time, so each fabric direction gets its own
+        waterfill problem (downlink conns only, then uplink conns only).
+        One all-conns-active problem would charge a colocated host's
+        outbound *uploads* against the remote workers' *downloads*
+        through the shared node-tx group — contention the simulator
+        never exhibits simultaneously — flattening exactly the
+        colocation signal the prefilter exists to surface;
+      * **straggler max** — the max (not a sum of per-worker rates)
+        mirrors the DES objective: every worker runs a fixed step count
+        and throughput divides by the END time, so the slowest worker is
+        the denominator.
+
+    Scores are a *ranking* surrogate (scheduling, jitter and pipelining
+    are ignored); ties preserve candidate order downstream.
+    """
+    task = evaluator._make_tasks(evaluator.default_placement())[0]
+    cfg, templates, W = task[0], task[1], task[2]
+    link_work: Dict[str, float] = {}
+    comp = 0.0
+    for tpl in templates:
+        ops, works, _edges, _roots = compile_template(tpl, cfg.resources)
+        for op, wk in zip(ops, works):
+            spec = cfg.resources[op.res]
+            if spec.kind == LINK:
+                # link work is in bytes; convert to seconds-at-full-share
+                # so it adds to compute durations in one time unit
+                link_work[op.res] = (link_work.get(op.res, 0.0)
+                                     + wk / spec.bandwidth)
+            else:
+                comp += wk
+    n = len(templates)
+    comp /= n
+    phases: Dict[str, List[str]] = {}
+    for r in sorted(link_work):
+        phases.setdefault(_direction_of(r), []).append(r)
+    models = [evaluator.topology.with_placement(hosts).grouped_model()
+              for hosts in candidates]
+    t_step = np.full((len(candidates), W), comp)   # [B, W] per-worker time
+    for links in phases.values():
+        lw = np.array([link_work[r] / n for r in links])
+        conns = [(w, r) for w in range(W) for r in links]
+        problems = []
+        for model in models:
+            caps, members = model.groups_for(conns)
+            problems.append((conns, caps, members))
+        _cols, caps_m, mem_m, wt_m = stack_waterfill_problems(problems)
+        shares = batched_waterfill(caps_m, mem_m, wt_m)
+        sh = shares.reshape(len(candidates), W, len(links))
+        t_step += (lw / sh).sum(axis=2)
+    return W / t_step.max(axis=1)
+
+
 # ------------------------------------------------------------------ results
 
 
@@ -336,7 +421,9 @@ def search_placement(evaluator: PlacementEvaluator,
                      seed: int = 0,
                      max_exhaustive: int = DEFAULT_MAX_EXHAUSTIVE,
                      max_rounds: int = 32,
-                     anneal_iters: int = 64) -> SearchResult:
+                     anneal_iters: int = 64,
+                     surrogate_prune: int = 16,
+                     surrogate_cap: int = 1 << 16) -> SearchResult:
     """Search shard->node placements of the evaluator's topology,
     maximizing predicted throughput.
 
@@ -345,6 +432,12 @@ def search_placement(evaluator: PlacementEvaluator,
     construction and annealing (default: the topology's own placement).
     The result is never worse than the default placement — the baseline
     is always scored and kept if the search cannot beat it.
+
+    ``surrogate`` enumerates the same space as ``exhaustive`` but scores
+    it with :func:`surrogate_scores` (one batched waterfill, no DES),
+    then runs the full simulator only on the top ``1/surrogate_prune``
+    fraction of candidates.  ``surrogate_cap`` bounds the enumerated
+    space (the proxy is vectorized, but not free).
     """
     if strategy not in STRATEGIES:
         raise ValueError(
@@ -381,6 +474,38 @@ def search_placement(evaluator: PlacementEvaluator,
         scores = evaluator.score_many(cands)
         i = _argmax(scores)
         best, best_s, rounds = cands[i], scores[i], 1
+    elif strategy == "surrogate":
+        space = len(host_list) ** M
+        if space > surrogate_cap:
+            raise ValueError(
+                f"surrogate search over {len(host_list)} hosts x {M} "
+                f"shards is {space} candidates (> {surrogate_cap}); use "
+                f"strategy='greedy' or 'anneal', or pass a larger "
+                f"surrogate_cap")
+        cands = [tuple(c) for c in
+                 itertools.product(host_list, repeat=M)]
+        proxy = surrogate_scores(evaluator, cands)
+        keep = max(1, -(-len(cands) // surrogate_prune))
+        order = sorted(range(len(cands)), key=lambda i: (-proxy[i], i))
+        # one representative per proxy-tied class first: symmetric
+        # placements tie *exactly* (identical stacked-solve rows), so a
+        # second member of a tied class spends a shortlist slot on a
+        # placement the DES scores identically; leftovers fill by rank
+        firsts, dups, seen = [], [], set()
+        for i in order:
+            v = round(float(proxy[i]), 12)
+            if v in seen:
+                dups.append(i)
+            else:
+                seen.add(v)
+                firsts.append(i)
+        # re-sort the shortlist by candidate index: DES ties then break
+        # toward the earlier candidate, exactly as exhaustive does
+        short = sorted((firsts + dups)[:keep])
+        short_cands = [cands[i] for i in short]
+        scores = evaluator.score_many(short_cands)
+        i = _argmax(scores)
+        best, best_s, rounds = short_cands[i], scores[i], 1
     elif strategy == "greedy":
         best, best_s, rounds = _greedy(evaluator, host_list, init,
                                        max_rounds)

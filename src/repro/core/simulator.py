@@ -74,6 +74,25 @@ _K_FAULT = 4     # a = FaultEvent, b = True (down edge) / False (up edge)
 _LINK_POLICIES = ("http2", "fifo", "ordered")
 
 
+def compile_template(tpl: StepTemplate, resources: Dict[str, ResourceSpec]
+                     ) -> tuple:
+    """Instantiation table for one step template: ``(ops, works, edges,
+    roots)``.
+
+    Work amounts and dependency edges don't change between steps, so both
+    engines compute them once per (template, resources) pair: the scalar
+    engine caches the tuple per run (``tpl_cache``), the batched engine
+    (``repro.core.batched``) packs it into its structure-of-arrays
+    template bank.  ``edges`` is ``(d, i)`` pairs in ascending dependent
+    order — the order dependents are walked at op completion, which fixes
+    the RNG draw sequence both engines must share.
+    """
+    works = [op.work(resources) for op in tpl.ops]
+    edges = [(d, i) for i, op in enumerate(tpl.ops) for d in op.deps]
+    roots = [i for i, op in enumerate(tpl.ops) if not op.deps]
+    return (tpl.ops, works, edges, roots)
+
+
 @dataclass
 class SimConfig:
     # Either an explicit resource dict, or a Topology to compile one from
@@ -389,11 +408,7 @@ class Simulation:
             tpl = next_step(w)
             cached = tpl_cache.get(id(tpl))
             if cached is None:
-                works = [op.work(resources) for op in tpl.ops]
-                edges = [(d, i) for i, op in enumerate(tpl.ops)
-                         for d in op.deps]
-                roots = [i for i, op in enumerate(tpl.ops) if not op.deps]
-                cached = (tpl.ops, works, edges, roots)
+                cached = compile_template(tpl, resources)
                 tpl_cache[id(tpl)] = cached
             ops, works, edges, roots = cached
             seq = completed[w]

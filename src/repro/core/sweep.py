@@ -30,18 +30,20 @@ profiling, or environments where fork is unavailable).
 """
 from __future__ import annotations
 
+import contextlib
 import multiprocessing
 import os
 import sys
 import threading
 from concurrent.futures import ProcessPoolExecutor
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 
 from repro.core.simulator import SimConfig, Simulation
 
 __all__ = [
     "parallel_map", "predict_many", "measure_many", "sweep_parallel",
-    "simulate_task", "simulate_all", "SimulationPool", "default_pool_size",
+    "simulate_task", "simulate_all", "simulate_batched", "SimulationPool",
+    "default_pool_size", "pool",
 ]
 
 
@@ -189,14 +191,32 @@ def _group_means(outs: Sequence[float], workers: Sequence[int],
 def simulate_all(tasks: Sequence[SimTask],
                  templates: Optional[list] = None,
                  parallel: bool = True,
-                 max_workers: Optional[int] = None) -> List[float]:
+                 max_workers: Optional[int] = None,
+                 batch: bool = False) -> List[float]:
     """Run pre-seeded :func:`simulate_task` payloads through the pool,
     order-preserving.  With ``templates``, every task's template slot is
     replaced by the shared list, shipped once per pool worker via the
     executor initializer instead of being re-pickled inside each task
     (candidate batches in ``repro.core.placement_search`` and the
     ``predict_many`` fan both reuse one template list across dozens of
-    tasks)."""
+    tasks).
+
+    ``batch=True`` routes through :func:`simulate_batched` — the lockstep
+    array engine in ``repro.core.batched`` runs every batchable task in
+    one in-process vectorized sweep (non-batchable tasks fall back to the
+    scalar simulator), same results, no process pool.
+
+    Inside a :func:`pool` block, tasks go to the ambient shared executor
+    instead of a fresh per-call pool (templates then ride inside each
+    task rather than via the initializer — the executor reuse is the
+    win there)."""
+    if batch:
+        return simulate_batched(tasks, templates=templates)
+    amb = _ambient_pool
+    if amb is not None:
+        if templates is not None:
+            tasks = [(t[0], templates) + tuple(t[2:]) for t in tasks]
+        return amb.map(tasks)
     if templates is None:
         return parallel_map(simulate_task, tasks, max_workers=max_workers,
                             parallel=parallel)
@@ -205,6 +225,48 @@ def simulate_all(tasks: Sequence[SimTask],
                         parallel=parallel,
                         initializer=_set_worker_templates,
                         initargs=(templates,))
+
+
+def simulate_batched(tasks: Sequence[SimTask],
+                     templates: Optional[list] = None,
+                     engine: str = "auto") -> List[float]:
+    """:func:`simulate_all` through the lockstep batched engine.
+
+    Each task becomes a :class:`repro.core.batched.Scenario`; one
+    ``run_scenarios`` call simulates every batchable group as stacked
+    arrays and punts the rest to the scalar simulator, so the returned
+    throughputs are identical to the serial path (``engine="scalar"``
+    forces the punt everywhere — useful for differential tests)."""
+    from repro.core.batched import Scenario, run_scenarios
+    scens = []
+    for cfg, tpls, num_workers, _bs, _wu in tasks:
+        scens.append(Scenario(cfg, tpls if tpls is not None else templates,
+                              num_workers))
+    traces = run_scenarios(scens, engine=engine)
+    return [tr.throughput(task[3], warmup_steps=task[4])
+            for task, tr in zip(tasks, traces)]
+
+
+_ambient_pool: Optional["SimulationPool"] = None
+
+
+@contextlib.contextmanager
+def pool(parallel: bool = True,
+         max_workers: Optional[int] = None) -> Iterator["SimulationPool"]:
+    """Ambient :class:`SimulationPool` scope: every :func:`simulate_all`
+    call inside the ``with`` block shares ONE executor instead of paying
+    pool startup per call.  ``benchmarks/run.py --fast`` wraps its whole
+    job loop in this — dozens of small figure fans, one pool.  Nestable;
+    the innermost pool wins."""
+    global _ambient_pool
+    prev = _ambient_pool
+    p = SimulationPool(parallel=parallel, max_workers=max_workers)
+    _ambient_pool = p
+    try:
+        yield p
+    finally:
+        _ambient_pool = prev
+        p.close()
 
 
 class SimulationPool:
@@ -260,17 +322,21 @@ class SimulationPool:
 
 def predict_many(run, workers: Sequence[int], n_runs: int = 3,
                  parallel: bool = True,
-                 max_workers: Optional[int] = None) -> Dict[int, float]:
+                 max_workers: Optional[int] = None,
+                 batch: bool = False) -> Dict[int, float]:
     """Predicted examples/s for each worker count, ``n_runs`` seeded
     simulations per count, fanned over the pool.  Identical to calling
-    ``run.predict(w, n_runs)`` per count (same seeds, same mean)."""
+    ``run.predict(w, n_runs)`` per count (same seeds, same mean).
+    ``batch=True`` uses the lockstep batched engine instead of the
+    process pool (see :func:`simulate_batched`)."""
     if not run.sim_steps_templates:
         run.prepare()
     tasks: List[SimTask] = []
     for w in workers:
         tasks.extend(run.prediction_tasks(w, n_runs))
     outs = simulate_all(tasks, templates=_shared_templates(run),
-                        parallel=parallel, max_workers=max_workers)
+                        parallel=parallel, max_workers=max_workers,
+                        batch=batch)
     return _group_means(outs, workers, n_runs)
 
 

@@ -1,0 +1,199 @@
+"""Differential tests: batched lockstep engine vs the scalar simulator.
+
+``repro.core.batched`` promises *bit-identical* traces to running each
+scenario through ``Simulation(cfg).run(...)`` one at a time — same step
+completion tuples, same staleness sequence, same event/version counters,
+same end time — with scalar fallback (never wrong answers) for anything
+outside the batchable regime.  These tests drive both engines over
+(W, seed, link-policy, fault, sync-mode) matrices and compare exactly.
+
+Set ``REPRO_BATCHED_FULL=1`` (the nightly job does) to widen every seed
+matrix; the default sizes keep the suite PR-fast.
+"""
+import dataclasses
+import os
+import random
+
+import pytest
+
+from repro.core.batched import (Scenario, _BatchedMT, classify,
+                                run_scenarios)
+from repro.core.events import Op, StepTemplate, ps_resources
+from repro.core.faults import FaultSpec
+from repro.core.simulator import SimConfig, Simulation
+
+FULL = bool(os.environ.get("REPRO_BATCHED_FULL"))
+NSEEDS = 12 if FULL else 4
+
+
+def make_template(layers, seed=0, num_ps=1):
+    """PS-training-shaped step (download -> fwd; bwd -> upload per layer),
+    the same synthetic workload shape the perf benchmark batches."""
+    rng = random.Random(seed)
+
+    def link(kind, i):
+        return kind if num_ps == 1 else f"{kind}:{i % num_ps}"
+
+    ops = []
+    fwd_prev = None
+    for i in range(layers):
+        dl = len(ops)
+        ops.append(Op(f"dl{i}", link("downlink", i),
+                      size=rng.uniform(2e6, 3e7)))
+        deps = (dl,) if fwd_prev is None else (dl, fwd_prev)
+        fwd_prev = len(ops)
+        ops.append(Op(f"fwd{i}", "worker", duration=rng.uniform(.005, .05),
+                      deps=deps))
+    bwd_prev = fwd_prev
+    for i in reversed(range(layers)):
+        bwd = len(ops)
+        ops.append(Op(f"bwd{i}", "worker", duration=rng.uniform(.01, .08),
+                      deps=(bwd_prev,)))
+        bwd_prev = bwd
+        ops.append(Op(f"ul{i}", link("uplink", i),
+                      size=rng.uniform(2e6, 3e7), deps=(bwd,)))
+    return StepTemplate(ops=ops)
+
+
+def make_cfg(steps_per_worker, seed=0, num_ps=1, **kw):
+    return SimConfig(resources=ps_resources(1e9, num_ps),
+                     link_policy="http2", win=2.8e6,
+                     steps_per_worker=steps_per_worker, warmup_steps=2,
+                     seed=seed, service_jitter=0.08,
+                     stall_alpha=2e-9, stall_rtt=5e-4, **kw)
+
+
+TPLS = [make_template(3, seed=0)]
+TPLS2 = [make_template(3, seed=0), make_template(4, seed=1)]
+TPLS_PS2 = [make_template(3, seed=0, num_ps=2),
+            make_template(4, seed=1, num_ps=2)]
+
+
+def fingerprint(tr):
+    return (tr.step_completions, tr.staleness, tr.meta["sim_end_time"],
+            tr.meta["num_events"], tr.meta["num_versions"])
+
+
+def assert_equivalent(scens):
+    """Batched output must be bit-identical to per-scenario scalar runs."""
+    traces = run_scenarios(scens, engine="auto", min_batch=1)
+    for sc, tr in zip(scens, traces):
+        ref = Simulation(sc.cfg).run(sc.steps, sc.num_workers,
+                                     sample=sc.sample)
+        assert fingerprint(tr) == fingerprint(ref), (
+            f"engine={tr.meta.get('engine')} "
+            f"fallback={tr.meta.get('batch_fallback')} "
+            f"W={sc.num_workers} seed={sc.cfg.seed}")
+    return traces
+
+
+FAMILIES = {
+    "smoke_w4": lambda: [Scenario(make_cfg(6, seed=s), TPLS, 4)
+                         for s in range(NSEEDS)],
+    "w8_ps2_2tpl": lambda: [Scenario(make_cfg(5, seed=s, num_ps=2),
+                                     TPLS_PS2, 8) for s in range(NSEEDS)],
+    "mixed_w": lambda: [Scenario(make_cfg(4, seed=s), TPLS2, 1 + (s % 8))
+                        for s in range(2 * NSEEDS)],
+    "fifo": lambda: [Scenario(dataclasses.replace(make_cfg(5, seed=s),
+                                                  link_policy="fifo"),
+                              TPLS, 4) for s in range(NSEEDS)],
+    "stall0": lambda: [Scenario(dataclasses.replace(make_cfg(5, seed=s),
+                                                    stall_alpha=0.0,
+                                                    stall_rtt=0.0),
+                                TPLS, 4) for s in range(NSEEDS)],
+    "jitter0": lambda: [Scenario(dataclasses.replace(make_cfg(4, seed=s),
+                                                     service_jitter=0.0),
+                                 TPLS, 3) for s in range(NSEEDS)],
+    "cycle": lambda: [Scenario(make_cfg(5, seed=s), TPLS2, 4, sample=False)
+                      for s in range(NSEEDS)],
+}
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_batched_matches_scalar(family):
+    assert_equivalent(FAMILIES[family]())
+
+
+def test_batched_engine_actually_used():
+    """The differential suite must not be vacuous: the homogeneous smoke
+    family has to take the lockstep path for (at least most of) its
+    members, not silently fall back to scalar-vs-scalar."""
+    traces = assert_equivalent(FAMILIES["smoke_w4"]())
+    batched = [t for t in traces if t.meta["engine"] == "batched"]
+    assert len(batched) >= len(traces) // 2, (
+        [t.meta.get("batch_fallback") for t in traces])
+
+
+def test_unbatchable_configs_fall_back_and_match():
+    """Sync/SSP modes and fault injection run scalar — with the reason
+    recorded — and still return the exact scalar trace."""
+    faults = FaultSpec(mttf=40.0, mttr=5.0)
+    scens = [Scenario(make_cfg(5, seed=s, sync_mode="sync"), TPLS, 4)
+             for s in range(2)]
+    scens += [Scenario(make_cfg(5, seed=s, sync_mode="ssp",
+                                staleness_bound=2), TPLS, 4)
+              for s in range(2)]
+    scens += [Scenario(make_cfg(5, seed=s, faults=faults), TPLS, 4)
+              for s in range(2)]
+    traces = assert_equivalent(scens)
+    assert all(t.meta["engine"] == "scalar" for t in traces)
+    reasons = [t.meta["batch_fallback"] for t in traces]
+    assert any("sync_mode" in r for r in reasons)
+    assert any("fault" in r for r in reasons)
+
+
+def test_forced_scalar_engine():
+    scens = [Scenario(make_cfg(4, seed=s), TPLS, 2) for s in range(3)]
+    traces = run_scenarios(scens, engine="scalar")
+    assert all(t.meta["engine"] == "scalar" for t in traces)
+    assert all(t.meta["batch_fallback"] == "forced scalar" for t in traces)
+
+
+def test_unknown_engine_raises():
+    with pytest.raises(ValueError, match="unknown engine"):
+        run_scenarios([Scenario(make_cfg(3), TPLS, 2)], engine="turbo")
+
+
+def test_small_group_falls_back():
+    (tr,) = run_scenarios([Scenario(make_cfg(4, seed=0), TPLS, 2)],
+                          engine="auto", min_batch=2)
+    assert tr.meta["engine"] == "scalar"
+    assert "min_batch" in tr.meta["batch_fallback"]
+
+
+def test_classify_reasons():
+    cfg = make_cfg(4, seed=0)
+    assert classify(cfg, 4) is None
+    cases = [
+        (dataclasses.replace(cfg, sync_mode="sync"), 4, "sync_mode"),
+        (dataclasses.replace(cfg, faults=FaultSpec(mttf=10.0, mttr=1.0)),
+         4, "fault"),
+        (dataclasses.replace(cfg, link_policy="ordered"), 4,
+         "link_policy"),
+        (dataclasses.replace(cfg, record_trace=True), 4, "trace"),
+        (dataclasses.replace(cfg, worker_speed={0: 2.0}), 4,
+         "heterogeneous"),
+        (dataclasses.replace(cfg, seed=None), 4, "unseeded"),
+        (cfg, 0, "num_workers"),
+    ]
+    for c, w, substr in cases:
+        reason = classify(c, w)
+        assert reason is not None and substr in reason, (substr, reason)
+    # an empty FaultSpec is equivalent to no faults at all
+    assert classify(dataclasses.replace(cfg, faults=FaultSpec()), 4) is None
+
+
+def test_batched_mt_matches_cpython_key_schedule():
+    """Row b of the vectorized seeder must equal CPython's MT state for
+    seed b — both the fast int path and the getstate() fallback."""
+    seeds = [0, 1, 7, 123456, 2 ** 32 - 1]
+    mt = _BatchedMT(seeds)
+    for b, s in enumerate(seeds):
+        ref = random.Random(s).getstate()[1][:624]
+        assert mt.key[b].tolist() == list(ref), f"seed {s}"
+    # non-word seeds route through random.Random.getstate()
+    big = [2 ** 40 + 3, -5]
+    mt = _BatchedMT(big)
+    for b, s in enumerate(big):
+        ref = random.Random(s).getstate()[1][:624]
+        assert mt.key[b].tolist() == list(ref), f"seed {s}"

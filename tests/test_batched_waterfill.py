@@ -1,0 +1,103 @@
+"""Batched waterfill vs the scalar solver, over the shared STRUCTURES.
+
+``batched_waterfill`` + ``stack_waterfill_problems`` must reproduce
+:func:`repro.core.bandwidth.waterfill` per problem row — same max-min
+allocations to float-accumulation tolerance — including heterogeneous
+problem sizes padded into one stack, weighted flows, and every group
+structure the incremental differential suite exercises.  The JAX backend
+is a float32 scoring surrogate and gets a looser tolerance.
+"""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core.bandwidth import (batched_waterfill,
+                                  stack_waterfill_problems, waterfill)
+from test_waterfill_incremental import STRUCTURES
+
+RTOL = 1e-9
+
+
+def random_problems(structure, seed, n, weighted=False):
+    """n random active-subset problems over one structure's universe."""
+    model, universe = STRUCTURES[structure]()
+    rng = random.Random(seed)
+    problems = []
+    for _ in range(n):
+        k = rng.randrange(1, len(universe) + 1)
+        conns = sorted(rng.sample(list(universe), k))
+        caps, members = model.groups_for(conns)
+        if weighted:
+            w = {c: rng.uniform(0.2, 3.0) for c in conns}
+            problems.append((conns, caps, members, w))
+        else:
+            problems.append((conns, caps, members))
+    return problems
+
+
+def assert_stack_matches_scalar(problems, backend="numpy", rtol=RTOL):
+    cols, caps, members, weights = stack_waterfill_problems(problems)
+    shares = batched_waterfill(caps, members, weights, backend=backend)
+    for b, prob in enumerate(problems):
+        conns = prob[0]
+        w = prob[3] if len(prob) > 3 else None
+        ref = waterfill(conns, prob[1], prob[2], weights=w)
+        got = {c: shares[b, j] for j, c in enumerate(cols[b])}
+        for c in conns:
+            assert got[c] == pytest.approx(ref[c], rel=rtol, abs=1e-12), (
+                f"problem {b} conn {c}: batched {got[c]} vs "
+                f"scalar {ref[c]}")
+        # phantom padding columns must stay at exactly zero
+        for j in range(len(conns), shares.shape[1]):
+            assert shares[b, j] == 0.0
+
+
+@pytest.mark.parametrize("structure", sorted(STRUCTURES))
+@pytest.mark.parametrize("seed", range(10))
+def test_batched_matches_scalar(structure, seed):
+    assert_stack_matches_scalar(random_problems(structure, seed, 8))
+
+
+@pytest.mark.parametrize("structure", ["star", "racked_asym_nic",
+                                       "loopback"])
+@pytest.mark.parametrize("seed", range(5))
+def test_batched_weighted(structure, seed):
+    assert_stack_matches_scalar(
+        random_problems(structure, 500 + seed, 6, weighted=True))
+
+
+def test_heterogeneous_stack():
+    """Problems of different sizes AND different group structures pad
+    into one stack without cross-talk."""
+    problems = []
+    for i, structure in enumerate(sorted(STRUCTURES)):
+        problems += random_problems(structure, 900 + i, 3)
+    assert_stack_matches_scalar(problems)
+
+
+def test_uncovered_connection_raises():
+    model, universe = STRUCTURES["star"]()
+    conns = sorted(universe)[:3]
+    caps, members = model.groups_for(conns)
+    bogus = conns + [("ghost", "nowhere")]
+    with pytest.raises(ValueError, match="no capacity group"):
+        stack_waterfill_problems([(bogus, caps, members)])
+
+
+def test_empty_stack_raises():
+    with pytest.raises(ValueError, match=">= 1 problem"):
+        stack_waterfill_problems([])
+
+
+def test_unknown_backend_raises():
+    with pytest.raises(ValueError, match="unknown backend"):
+        batched_waterfill(np.ones((1, 1)), np.ones((1, 1, 2), bool),
+                          backend="cuda")
+
+
+def test_jax_backend_close():
+    pytest.importorskip("jax")
+    problems = random_problems("star", 7, 6)
+    problems += random_problems("grouped", 8, 6)
+    assert_stack_matches_scalar(problems, backend="jax", rtol=2e-4)

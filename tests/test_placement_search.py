@@ -232,6 +232,75 @@ class TestIncrementalWaterfill:
         assert "waterfill" not in trace.meta
 
 
+class TestSurrogate:
+    """The batched-waterfill prefilter: DES spend drops by an order of
+    magnitude while the chosen placement matches the exhaustive oracle
+    (or ties it exactly — symmetric placements simulate identically)."""
+
+    @staticmethod
+    def bypass_topology(num_shards=2, oversub=8.0):
+        """rack_pool_topology with ``loopback_bypass``: colocated conns
+        skip the NIC/rack groups, giving the steady-state proxy the
+        capacity signal that makes colocation rankable (without it the
+        conservative model scores w0 placements on scheduling noise the
+        proxy cannot see)."""
+        bad = tuple(Node(f"bad{p}", rack="r0") for p in range(num_shards))
+        good = tuple(Node(f"good{p}", rack="r1") for p in range(num_shards))
+        return Topology(
+            workers=tuple(Node(f"w{i}", rack="r1") for i in range(3)),
+            ps_nodes=bad + good,
+            racks=(Rack("r0", oversubscription=oversub), Rack("r1")),
+            bandwidth=BW, loopback_bypass=True,
+        ).with_placement(tuple(n.name for n in bad))
+
+    @pytest.mark.parametrize("num_shards", [1, 2])
+    def test_matches_exhaustive(self, num_shards):
+        topo = rack_pool_topology(num_shards)
+        hosts = tuple(n.name for n in topo.ps_nodes)
+        # fresh evaluators per strategy: the shared memoized cache would
+        # otherwise hide how much DES work the surrogate really spends
+        exact = search_placement(make_evaluator(topo), "exhaustive",
+                                 hosts=hosts)
+        sur = search_placement(make_evaluator(topo), "surrogate",
+                               hosts=hosts)
+        assert (sur.placement == exact.placement
+                or sur.throughput == exact.throughput)
+        assert sur.throughput >= sur.baseline_throughput * (1 - 1e-9)
+
+    def test_matches_exhaustive_with_colocation(self):
+        """Full host list including the workers: on the bypass topology
+        the surrogate must find the same colocated optimum as the
+        oracle's 49-candidate enumeration."""
+        topo = self.bypass_topology(2)
+        exact = search_placement(make_evaluator(topo), "exhaustive")
+        sur = search_placement(make_evaluator(topo), "surrogate")
+        assert (sur.placement == exact.placement
+                or sur.throughput == exact.throughput)
+        assert any(h.startswith("w") for h in sur.placement)
+
+    def test_prunes_the_space(self):
+        """2 shards over 7 hosts = 49 candidates: the shortlist plus the
+        baseline must stay >= 5x below the enumerated space."""
+        topo = rack_pool_topology(2)
+        ev = make_evaluator(topo)
+        res = search_placement(ev, "surrogate")
+        space = len(ev.candidate_hosts()) ** 2
+        assert res.evaluated * 5 <= space, (res.evaluated, space)
+
+    def test_surrogate_space_capped(self):
+        ev = make_evaluator(rack_pool_topology(2))
+        with pytest.raises(ValueError, match="use strategy='greedy'"):
+            search_placement(ev, "surrogate", surrogate_cap=3)
+
+    def test_surrogate_scores_rank_the_planted_optimum(self):
+        """The proxy alone (no DES at all) must rank the flat-rack nodes
+        above the oversubscribed default ones."""
+        from repro.core.placement_search import surrogate_scores
+        ev = make_evaluator(rack_pool_topology(1))
+        scores = surrogate_scores(ev, [("bad0",), ("good0",)])
+        assert scores[1] > scores[0]
+
+
 class TestStragglerWhatIf:
     """The ROADMAP straggler knob: Node.speed threads through prediction
     AND the topology-aware emulator, and both report consistent

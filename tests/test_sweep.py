@@ -34,12 +34,41 @@ def test_parallel_map_preserves_order():
 def test_simulation_pool_reuses_executor():
     tasks = _tasks()
     serial = [sweep.simulate_task(t) for t in tasks]
-    with sweep.SimulationPool() as pool:
+    # explicit max_workers: the default collapses to the serial fallback
+    # on single-CPU hosts, which never materializes an executor
+    with sweep.SimulationPool(max_workers=2) as pool:
         a = pool.map(tasks)
         b = pool.map(tasks)       # second batch reuses the executor
         assert pool._executor is not None
     assert pool._executor is None  # context exit released the workers
     assert a == serial and b == serial
+
+
+def test_simulate_all_batch_mode_identical():
+    """batch=True routes through the lockstep engine bit-identically."""
+    tasks = _tasks(workers=(2, 4), n_runs=3)
+    serial = sweep.simulate_all(tasks, parallel=False)
+    assert sweep.simulate_all(tasks, batch=True) == serial
+    assert sweep.simulate_batched(tasks, engine="scalar") == serial
+
+
+def test_ambient_pool_context():
+    """sweep.pool() installs one shared pool that simulate_all reuses,
+    and restores the previous state (even nested) on exit."""
+    tasks = _tasks()
+    serial = sweep.simulate_all(tasks, parallel=False)
+    assert sweep._ambient_pool is None
+    with sweep.pool(max_workers=2) as p:
+        assert sweep._ambient_pool is p
+        got = sweep.simulate_all(tasks)          # rides the ambient pool
+        assert p._executor is not None           # really went through it
+        with sweep.pool(parallel=False) as inner:
+            assert sweep._ambient_pool is inner
+            assert sweep.simulate_all(tasks) == serial
+        assert sweep._ambient_pool is p
+    assert sweep._ambient_pool is None
+    assert p._executor is None                   # exit closed the workers
+    assert got == serial
 
 
 def test_serial_env_override(monkeypatch):
