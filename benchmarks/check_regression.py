@@ -51,7 +51,7 @@ DEFAULT_REPORT = os.path.join(
 # every record-bearing section a benchmark json can carry; a committed
 # baseline section that a fresh CI run fails to produce is a hard error
 # (a silently dropped section would pass the gate with zero coverage)
-SECTION_NAMES = ("workloads", "general", "syncmode", "faults", "batched")
+SECTION_NAMES = ("workloads", "general", "syncmode", "faults", "batched", "fleet")
 
 
 def load(path: str) -> dict:
@@ -60,13 +60,18 @@ def load(path: str) -> dict:
 
 
 def missing_sections(base: dict, ci: dict, sections: set | None) -> list[str]:
-    """Sections present (non-empty) in the committed baseline but absent
-    or empty in the CI run — restricted to ``sections`` when given."""
+    """Sections the CI run should have produced but didn't: any section
+    present (non-empty) in the committed baseline, plus — stricter —
+    every section the caller *named* via ``--sections``.  An explicitly
+    requested section that the fresh CI json lacks is a hard error even
+    when the committed baseline predates it: the job that asked for the
+    gate would otherwise pass with zero coverage."""
     out = []
     for name in SECTION_NAMES:
         if sections is not None and name not in sections:
             continue
-        if base.get(name) and not ci.get(name):
+        explicit = sections is not None and name in sections
+        if (base.get(name) or explicit) and not ci.get(name):
             out.append(name)
     return out
 
@@ -222,6 +227,52 @@ def batched_rows(base: dict, samples: list[dict]) -> list[dict]:
     return rows
 
 
+def fleet_records(bench: dict) -> dict:
+    """(section, key) -> record for the merged-fleet-engine section.
+    Kept out of :func:`records` for the same reason as ``batched``: fleet
+    records carry no ``speedup`` column."""
+    out = {}
+    for rec in bench.get("fleet", []):
+        out[("fleet", rec["mode"], rec["W"])] = rec
+    return out
+
+
+def fleet_rows(base: dict, samples: list[dict]) -> list[dict]:
+    """Fleet-section rows gating ``fleet_ratio`` — the merged engine's
+    events/s over the scalar engine running the same jobs back-to-back,
+    measured interleaved in one process (machine-independent).  Older
+    baselines without the section simply produce no rows."""
+    base_recs = fleet_records(base)
+    sample_recs = [fleet_records(s) for s in samples]
+    rows = []
+    for key, brec in sorted(base_recs.items()):
+        bval = brec.get("fleet_ratio")
+        if not bval:
+            continue
+        vals = []
+        for recs in sample_recs:
+            if key in recs:
+                v = recs[key].get("fleet_ratio")
+                if v is not None:
+                    vals.append(v)
+        if not vals or len(vals) < len(sample_recs):
+            continue
+        ci_val = statistics.median(vals)
+        rows.append(
+            {
+                "section": key[0],
+                "workload": key[1],
+                "W": key[2],
+                "metric": "fleet_ratio",
+                "baseline": bval,
+                "ci": ci_val,
+                "samples": vals,
+                "ratio": ci_val / bval,
+            }
+        )
+    return rows
+
+
 def rerun(fast: bool, skip_ref: bool, sections: list[str] | None = None) -> dict:
     """One more in-process benchmark sample, written to a throwaway path
     so the committed baseline is never touched.  ``fast`` must match the
@@ -306,7 +357,8 @@ def main() -> None:
     rows = section_rows(samples)
     irows = incr_rows(base, samples) if wanted("general") else []
     brows = batched_rows(base, samples) if wanted("batched") else []
-    if not rows and not irows and not brows:
+    frows = fleet_rows(base, samples) if wanted("fleet") else []
+    if not rows and not irows and not brows and not frows:
         print(
             f"# no comparable records between {args.baseline} and "
             f"{args.ci}; nothing to gate"
@@ -317,7 +369,7 @@ def main() -> None:
         return statistics.median(r["ratio"] for r in rs) if rs else None
 
     def needs_rerun() -> bool:
-        for rs in (rows, irows, brows):
+        for rs in (rows, irows, brows, frows):
             v = verdict_ratio(rs)
             if v is not None and v < floor:
                 return True
@@ -339,13 +391,14 @@ def main() -> None:
         new_rows = section_rows(samples)
         new_irows = incr_rows(base, samples) if wanted("general") else []
         new_brows = batched_rows(base, samples) if wanted("batched") else []
-        if not new_rows and not new_irows and not new_brows:
+        new_frows = fleet_rows(base, samples) if wanted("fleet") else []
+        if not new_rows and not new_irows and not new_brows and not new_frows:
             print(
                 "# rerun shares no records with the baseline; "
                 "keeping prior verdict"
             )
             break
-        rows, irows, brows = new_rows, new_irows, new_brows
+        rows, irows, brows, frows = new_rows, new_irows, new_brows, new_frows
 
     median_ratio = verdict_ratio(rows)
     worst = min(rows, key=lambda r: r["ratio"]) if rows else None
@@ -353,10 +406,13 @@ def main() -> None:
     incr_failed = incr_median is not None and incr_median < floor
     batched_median = verdict_ratio(brows)
     batched_failed = batched_median is not None and batched_median < floor
+    fleet_median = verdict_ratio(frows)
+    fleet_failed = fleet_median is not None and fleet_median < floor
     failed = (
         (median_ratio is not None and median_ratio < floor)
         or incr_failed
         or batched_failed
+        or fleet_failed
     )
     if rows:
         print(f"section,workload,W,{metric}_base,{metric}_ci,ratio")
@@ -365,7 +421,7 @@ def main() -> None:
                 f"{r['section']},{r['workload']},{r['W']},"
                 f"{r['baseline']:.3g},{r['ci']:.3g},{r['ratio']:.3f}"
             )
-    for extra in (irows, brows):
+    for extra in (irows, brows, frows):
         if extra:
             m = extra[0]["metric"]
             print(f"section,workload,W,{m}_base,{m}_ci,ratio")
@@ -391,6 +447,9 @@ def main() -> None:
         "batched_rows": brows,
         "batched_median_ratio": batched_median,
         "batched_failed": batched_failed,
+        "fleet_rows": frows,
+        "fleet_median_ratio": fleet_median,
+        "fleet_failed": fleet_failed,
         "failed": failed,
     }
     os.makedirs(os.path.dirname(args.report) or ".", exist_ok=True)
@@ -411,6 +470,13 @@ def main() -> None:
             f"# batched-engine gate {state}: batched-section median "
             f"batch_speedup ratio {batched_median:.2f}x of baseline "
             f"(floor {floor:.2f}, {len(brows)} record(s))"
+        )
+    if fleet_median is not None:
+        state = "REGRESSION" if fleet_failed else "OK"
+        print(
+            f"# fleet-engine gate {state}: fleet-section median "
+            f"fleet_ratio {fleet_median:.2f}x of baseline "
+            f"(floor {floor:.2f}, {len(frows)} record(s))"
         )
     if failed:
         where = (

@@ -88,7 +88,7 @@ def time_engine(sim_cls, tpls, cfg_fn, num_workers: int, reps: int):
 
 
 ALL_SECTIONS = ("workloads", "general", "syncmode", "faults", "batched",
-                "sweep")
+                "fleet", "sweep")
 
 
 def run(fast: bool = False, skip_ref: bool = False,
@@ -357,6 +357,61 @@ def run(fast: bool = False, skip_ref: bool = False,
               f"batched {batched_evs:.0f} ev/s, "
               f"median speedup {rec['batch_speedup']:.1f}x "
               f"({punted} punted)")
+
+    # merged fleet engine (repro.core.fleet): two PS jobs contending on
+    # one shared PS-host NIC through a single event calendar + waterfill,
+    # timed against the same two jobs run back-to-back on the scalar
+    # engine in the same process.  The gate metric is the MEDIAN per-rep
+    # events/s ratio (machine-independent, like batch_speedup): merged
+    # bookkeeping regressions — group invalidation, calendar churn, live
+    # per-job state — show up as a ratio drop.  check_regression.py gates
+    # "fleet_ratio".
+    if want("fleet"):
+        from repro.core.fleet import FleetConfig, FleetJob, FleetSimulation
+        from repro.core.topology import Node, Placement
+        spf = 60 if fast else 150
+        freps = 3  # median-of-3 even in fast mode: a 1-rep ratio is too
+        # noisy (0.64-0.98 observed on an idle box) to gate in CI
+        ftopo = Topology(
+            workers=(Node("h0", nic=2.0),)
+            + tuple(Node(f"w{i}") for i in range(6)),
+            placement=Placement(("h0",)), bandwidth=1e9)
+        fjobs = (FleetJob(name="A", workers=("w0", "w1", "w2", "w3"),
+                          ps_hosts=("h0",), steps_per_worker=spf,
+                          warmup_steps=10, seed=0),
+                 FleetJob(name="B", workers=("w4", "w5"),
+                          ps_hosts=("h0",), steps_per_worker=spf,
+                          warmup_steps=10, seed=1))
+        fcfg = FleetConfig(topology=ftopo, jobs=fjobs)
+        fsteps = {"A": [make_template(6, seed=s) for s in range(3)],
+                  "B": [make_template(3, seed=s) for s in range(3)]}
+        fratios = []
+        scalar_fevs = merged_fevs = 0.0
+        for _rep in range(freps):
+            t0 = time.perf_counter()
+            ev_s = 0
+            for j, job in enumerate(fcfg.jobs):
+                tr = Simulation(fcfg.sim_config(j)).run(
+                    fsteps[job.name], job.num_workers)
+                ev_s += tr.meta["num_events"]
+            dt_s = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            ft = FleetSimulation(fcfg).run(fsteps, merged=True)
+            dt_m = time.perf_counter() - t0
+            ev_m = ft.meta["num_events"]
+            scalar_fevs, merged_fevs = ev_s / dt_s, ev_m / dt_m
+            fratios.append(merged_fevs / scalar_fevs)
+        rec = {"mode": "two_job", "workload": "small",
+               "W": sum(j.num_workers for j in fjobs),
+               "steps_per_worker": spf,
+               "scalar_events_per_s": scalar_fevs,
+               "events_per_s": merged_fevs,
+               "fleet_ratio": statistics.median(fratios),
+               "cpus": ncpu, "engine": "fleet-merged"}
+        out["fleet"] = [rec]
+        print(f"# fleet: W={rec['W']} scalar {scalar_fevs:.0f} ev/s, "
+              f"merged {merged_fevs:.0f} ev/s, "
+              f"median ratio {rec['fleet_ratio']:.2f}x")
 
     # figure-equivalent sweep: n_runs seeded sims per worker count, serial
     # in-process vs fanned across the pool (what the fig13/14/20/25

@@ -106,10 +106,42 @@ def classify(cfg: SimConfig, num_workers: int) -> Optional[str]:
     return None
 
 
+def _fallback_category(reason: str) -> str:
+    """Fold a free-text fallback reason into a stable category so sweeps
+    (fleet mixes especially) can aggregate *why* scenarios rode the scalar
+    path without parsing prose: barrier | faults | topology | hetero |
+    policy | trace | unseeded | degenerate | forced | group-size | punt."""
+    if reason.startswith("sync_mode="):
+        return "barrier"
+    if reason == "fault injection":
+        return "faults"
+    if reason in ("explicit topology",
+                  "non-uniform bandwidth model (general waterfill path)"):
+        return "topology"
+    if reason == "heterogeneous compute speeds":
+        return "hetero"
+    if reason.startswith("link_policy="):
+        return "policy"
+    if reason == "per-op trace recording":
+        return "trace"
+    if reason.startswith("unseeded"):
+        return "unseeded"
+    if reason in ("num_workers < 1", "no steps"):
+        return "degenerate"
+    if reason == "forced scalar":
+        return "forced"
+    if "min_batch" in reason:
+        return "group-size"
+    if reason.startswith("punt:"):
+        return "punt"
+    return "other"
+
+
 def _scalar_run(sc: Scenario, reason: str) -> Trace:
     tr = Simulation(sc.cfg).run(sc.steps, sc.num_workers, sample=sc.sample)
     tr.meta["engine"] = "scalar"
     tr.meta["batch_fallback"] = reason
+    tr.meta["batch_fallback_reason"] = _fallback_category(reason)
     return tr
 
 
@@ -1018,7 +1050,9 @@ def run_scenarios(scenarios: Sequence[Scenario], engine: str = "auto",
     trace's ``meta["engine"]`` reports how it actually ran: ``"batched"``
     or ``"scalar"`` (with ``meta["batch_fallback"]`` naming the reason —
     an unbatchable configuration, a too-small group, or a mid-run punt on
-    ambiguous event ordering).
+    ambiguous event ordering — and ``meta["batch_fallback_reason"]`` its
+    stable category: barrier | faults | topology | hetero | policy |
+    trace | unseeded | degenerate | forced | group-size | punt).
 
     ``engine="scalar"`` forces the scalar path (differential baseline);
     ``"auto"`` batches whatever qualifies.

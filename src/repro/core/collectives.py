@@ -91,6 +91,37 @@ def tree_round_flows(n: int) -> List[List[_Flow]]:
     return reduce_rounds + broadcast
 
 
+def collective_rounds(participants: List[int], nbytes: float,
+                      algo: str) -> List[Tuple[List[_Flow], float]]:
+    """Round schedule of one all-reduce over an explicit *membership* —
+    ``[(flows, per_flow_bytes), ...]``, flows in participant ids.
+
+    This is the live-flow form of the algorithms above: instead of
+    compiling a fixed rate at DAG-build time, a fleet engine launches each
+    round's flows into its shared waterfill and starts the next round when
+    the current one drains.  Partial participation (herring-style k-of-n)
+    falls out: pass whichever k members showed up and the schedule is the
+    k-member collective.  Ring: 2(m-1) rounds of m flows moving
+    ``nbytes/m`` each; tree: binomial reduce + mirrored broadcast, each
+    round moving the full payload.
+    """
+    if algo not in ALGORITHMS:
+        raise ValueError(
+            f"unknown all-reduce algorithm {algo!r} "
+            f"(expected one of {ALGORITHMS})")
+    if nbytes < 0:
+        raise ValueError(f"nbytes must be >= 0, got {nbytes}")
+    members = sorted(set(participants))
+    m = len(members)
+    if m <= 1 or nbytes == 0:
+        return []
+    if algo == "ring":
+        flows = [(members[i], members[(i + 1) % m]) for i in range(m)]
+        return [(list(flows), nbytes / m)] * ring_rounds(m)
+    return [([(members[s], members[d]) for s, d in flows], nbytes)
+            for flows in tree_round_flows(m)]
+
+
 def _round_rate_factor(topology: Optional["Topology"],
                        flows: List[_Flow]) -> float:
     """Water-filled rate (multiples of the nominal NIC bandwidth) of the

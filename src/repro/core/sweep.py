@@ -44,6 +44,7 @@ __all__ = [
     "parallel_map", "predict_many", "measure_many", "sweep_parallel",
     "simulate_task", "simulate_all", "simulate_batched", "SimulationPool",
     "default_pool_size", "pool",
+    "FleetTask", "simulate_fleet_task", "simulate_fleets",
 ]
 
 
@@ -135,6 +136,29 @@ def simulate_task(task: SimTask) -> float:
         templates = _worker_templates
     trace = Simulation(cfg).run(templates, num_workers)
     return trace.throughput(batch_size, warmup_steps=warmup_steps)
+
+
+# A fleet payload: (FleetConfig, {job name -> templates}, merged).  Every
+# task is fully seeded by its jobs' own seeds, so the serial == parallel
+# bit-identity of the scalar sweep carries over unchanged.
+FleetTask = Tuple[object, dict, Optional[bool]]
+
+
+def simulate_fleet_task(task: FleetTask):
+    """One seeded fleet run -> :class:`repro.core.fleet.FleetTrace` (the
+    multi-job unit of parallel work; per-job throughputs come off the
+    returned per-job traces)."""
+    from repro.core.fleet import FleetSimulation
+    cfg, steps_by_job, merged = task
+    return FleetSimulation(cfg).run(steps_by_job, merged=merged)
+
+
+def simulate_fleets(tasks: Sequence[FleetTask], parallel: bool = True,
+                    max_workers: Optional[int] = None) -> List:
+    """Fan pre-seeded fleet payloads across the pool, order-preserving —
+    ``simulate_fleet_task`` per task, same results serial or parallel."""
+    return parallel_map(simulate_fleet_task, list(tasks),
+                        max_workers=max_workers, parallel=parallel)
 
 
 def measure_task(args: tuple) -> float:

@@ -415,6 +415,11 @@ def _allreduce_step(tpl: StepTemplate, num_workers: int, bandwidth: float,
         if res.startswith("uplink"):
             new_op = Op(name=f"allreduce/{_short_name(op.name)}",
                         res="collective",
+                        # gradient bytes ride along (work() ignores size on
+                        # a COMPUTE resource): fleet engines replace the
+                        # compiled duration with live per-round flows and
+                        # need the payload
+                        size=op.size,
                         duration=allreduce_duration(
                             op.size, num_workers, algo, bandwidth,
                             rtt=rtt, topology=topology),

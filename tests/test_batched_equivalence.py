@@ -197,3 +197,32 @@ def test_batched_mt_matches_cpython_key_schedule():
     for b, s in enumerate(big):
         ref = random.Random(s).getstate()[1][:624]
         assert mt.key[b].tolist() == list(ref), f"seed {s}"
+
+
+def test_fallback_reason_categories():
+    """Every scalar fallback stamps ``meta["batch_fallback_reason"]`` with
+    its machine-readable category alongside the free-text reason."""
+    faults = FaultSpec(mttf=40.0, mttr=5.0)
+    cases = [
+        (Scenario(make_cfg(5, seed=0, sync_mode="sync"), TPLS, 4),
+         "barrier"),
+        (Scenario(make_cfg(5, seed=0, faults=faults), TPLS, 4), "faults"),
+        (Scenario(make_cfg(5, seed=0,
+                           worker_speed={0: 2.0}), TPLS, 4), "hetero"),
+        (Scenario(dataclasses.replace(make_cfg(5, seed=0),
+                                      link_policy="ordered"), TPLS, 4),
+         "policy"),
+        (Scenario(make_cfg(5, seed=0, record_trace=True), TPLS, 4),
+         "trace"),
+    ]
+    traces = run_scenarios([sc for sc, _cat in cases], engine="auto")
+    for tr, (_sc, cat) in zip(traces, cases):
+        assert tr.meta["engine"] == "scalar"
+        assert tr.meta["batch_fallback_reason"] == cat, (
+            cat, tr.meta["batch_fallback"])
+
+
+def test_forced_scalar_fallback_category():
+    (tr,) = run_scenarios([Scenario(make_cfg(4, seed=0), TPLS, 2)],
+                          engine="scalar")
+    assert tr.meta["batch_fallback_reason"] == "forced"

@@ -1,0 +1,229 @@
+"""Multi-tenant fleet engine (repro.core.fleet) invariants.
+
+Covers the PR's acceptance gates at unit-test granularity:
+
+  * a single-job fleet delegates to the scalar engine bit-identically;
+  * per-job state isolation — job A's trace is invariant to job B's seed
+    (B is behaviorally seed-invariant, so its seed can only leak through
+    shared RNG/controller/trace state, which must not exist);
+  * fleet sweeps are bit-identical serial vs parallel (pickled tasks);
+  * adding a contender never increases any job's throughput (merged
+    run-alone baseline — same waterfill arithmetic on both sides);
+  * herring-style k-of-n partial participation never finishes later than
+    full participation;
+  * the fleet emulator (ground truth) and the merged DES agree on
+    two-job contention within a loose tolerance, and both agree on the
+    *direction* (contended <= alone).
+"""
+import random
+
+import pytest
+
+from repro.core.events import Op, StepTemplate
+from repro.core.fleet import (FleetConfig, FleetJob, FleetSimulation,
+                              interference_report, jain_index)
+from repro.core.simulator import Simulation
+from repro.core.sweep import simulate_fleet_task, simulate_fleets
+from repro.core.topology import Node, Placement, Rack, Topology
+
+STEPS = 40
+WARMUP = 8
+
+
+def _template(layers=4, seed=0, size_scale=1.0):
+    """PS-shaped synthetic step: dl -> fwd per layer, then bwd -> ul."""
+    rng = random.Random(seed)
+    ops = []
+    fwd_prev = None
+    for i in range(layers):
+        dl = len(ops)
+        ops.append(Op(f"dl{i}", "downlink",
+                      size=size_scale * rng.uniform(2e6, 2e7)))
+        deps = (dl,) if fwd_prev is None else (dl, fwd_prev)
+        fwd_prev = len(ops)
+        ops.append(Op(f"fwd{i}", "worker", duration=rng.uniform(.004, .03),
+                      deps=deps))
+    bwd_prev = fwd_prev
+    for i in reversed(range(layers)):
+        bwd = len(ops)
+        ops.append(Op(f"bwd{i}", "worker", duration=rng.uniform(.008, .05),
+                      deps=(bwd_prev,)))
+        bwd_prev = bwd
+        ops.append(Op(f"ul{i}", "uplink",
+                      size=size_scale * rng.uniform(2e6, 2e7), deps=(bwd,)))
+    return StepTemplate(ops=ops)
+
+
+def _topology(oversub=1.0):
+    return Topology(
+        workers=(Node("h0", rack="r0", nic=2.0),)
+        + tuple(Node(f"w{i}", rack="r1") for i in range(6)),
+        racks=(Rack("r0", oversubscription=oversub), Rack("r1")),
+        placement=Placement(("h0",)), bandwidth=1e9)
+
+
+def _job(name, workers, seed=0, **kw):
+    kw.setdefault("ps_hosts", ("h0",))
+    kw.setdefault("steps_per_worker", STEPS)
+    kw.setdefault("warmup_steps", WARMUP)
+    return FleetJob(name=name, workers=tuple(workers), seed=seed,
+                    batch_size=8, **kw)
+
+
+def _pair(oversub=2.0, seed_b=1, **kw_b):
+    return FleetConfig(topology=_topology(oversub), jobs=(
+        _job("A", ("w0", "w1", "w2"), seed=0, service_jitter=0.05),
+        _job("B", ("w4", "w5"), seed=seed_b, **kw_b)))
+
+
+def _steps(cfg, n_tpl=2):
+    return {job.name: [_template(seed=s) for s in range(n_tpl)]
+            for job in cfg.jobs}
+
+
+def test_single_job_fleet_delegates_bit_identically():
+    cfg = FleetConfig(topology=_topology(), jobs=(
+        _job("A", ("w0", "w1", "w2"), seed=3, service_jitter=0.05),))
+    tpls = [_template(seed=s) for s in range(2)]
+    fleet_tr = FleetSimulation(cfg).run({"A": tpls},
+                                        merged=False).jobs["A"]
+    direct = Simulation(cfg.sim_config(0)).run(tpls, 3)
+    assert fleet_tr.step_completions == direct.step_completions
+    assert fleet_tr.meta["sim_end_time"] == direct.meta["sim_end_time"]
+    assert fleet_tr.meta["num_events"] == direct.meta["num_events"]
+
+
+def test_job_a_trace_invariant_to_job_b_seed():
+    # B is behaviorally seed-invariant: one template, no jitter, no
+    # sampling — so its seed can only reach A through illegally shared
+    # RNG/controller/trace state in the merged engine
+    steps = None
+    traces_a = []
+    for seed_b in (1, 99):
+        cfg = _pair(seed_b=seed_b, sample=False)
+        steps = {"A": [_template(seed=0), _template(seed=1)],
+                 "B": [_template(seed=7)]}
+        ft = FleetSimulation(cfg).run(steps, merged=True)
+        traces_a.append(ft.jobs["A"])
+    assert traces_a[0].step_completions == traces_a[1].step_completions
+    assert (traces_a[0].meta["sim_end_time"]
+            == traces_a[1].meta["sim_end_time"])
+
+
+def test_fleet_serial_equals_parallel():
+    tasks = []
+    for oversub in (1.0, 2.0, 4.0):
+        cfg = _pair(oversub=oversub)
+        tasks.append((cfg, _steps(cfg), True))
+    serial = [simulate_fleet_task(t) for t in tasks]
+    par = simulate_fleets(tasks, parallel=True)
+    assert par == serial
+
+
+def test_no_speedup_under_contention():
+    cfg = _pair(oversub=2.0)
+    rep = interference_report(cfg, _steps(cfg))
+    for name, r in rep["jobs"].items():
+        assert r["throughput"] <= r["alone"] * (1 + 1e-9), name
+        assert r["slowdown"] >= 1.0 - 1e-9, name
+    assert 0.0 < rep["jain"] <= 1.0
+
+
+def test_kofn_partial_participation_no_slower():
+    topo = _topology()
+    ends = {}
+    for k in (0, 3):
+        jobs = (_job("A", ("w0", "w1", "w2", "w3"), ps_hosts=(),
+                     sync_mode="allreduce", collective_k=k),)
+        cfg = FleetConfig(topology=topo, jobs=jobs)
+        ft = FleetSimulation(cfg).run(
+            {"A": [_template(seed=0)]}, merged=True)
+        ends[k] = ft.jobs["A"].meta["sim_end_time"]
+    # k-of-4 commits each round earlier than (or with) full participation
+    assert ends[3] <= ends[0] + 1e-12
+
+
+def test_jain_index_bounds():
+    assert jain_index([1.0, 1.0, 1.0]) == pytest.approx(1.0)
+    assert jain_index([1.0, 0.0]) == pytest.approx(0.5)
+    assert jain_index([]) == 1.0
+
+
+def test_fault_on_live_collective_job_rejected():
+    from repro.core.faults import FaultSpec
+    jobs = (_job("A", ("w0", "w1"), ps_hosts=(), sync_mode="allreduce",
+                 faults=FaultSpec(mttf=5.0, mttr=1.0, horizon=50.0)),
+            _job("B", ("w4", "w5"), seed=1))
+    cfg = FleetConfig(topology=_topology(), jobs=jobs)
+    with pytest.raises(ValueError, match="live-collective"):
+        FleetSimulation(cfg).run(_steps(cfg), merged=True)
+
+
+def test_scale_fleet_pins_rack_caps():
+    from repro.launch.whatif import scale_fleet
+    cfg = _pair(oversub=4.0)
+    caps_before = cfg.topology.rack_uplink_caps()
+    scaled = scale_fleet(cfg, "A", 3)
+    assert scaled.jobs[0].num_workers == 3 * cfg.jobs[0].num_workers
+    assert scaled.jobs[1].workers == cfg.jobs[1].workers
+    # cloned machines add NIC capacity, but the physical rack uplink must
+    # not widen with them
+    caps_after = scaled.topology.rack_uplink_caps()
+    for rack, (eg, _in) in caps_before.items():
+        assert caps_after[rack][0] == pytest.approx(eg)
+
+
+def test_load_fleet_example_spec():
+    import os
+
+    from repro.launch.whatif import load_fleet
+    path = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "examples", "fleet.json")
+    cfg, steps = load_fleet(path)
+    assert {j.name for j in cfg.jobs} == {"A", "B"}
+    assert set(steps) == {"A", "B"}
+    for job in cfg.jobs:
+        assert len(steps[job.name]) == 3
+
+
+def test_fleet_emulator_two_job_contention_parity():
+    """Ground-truth emulator vs merged DES on a shared-PS-host two-job
+    fleet: loose quantitative agreement, exact qualitative agreement
+    (contention can only slow a job down)."""
+    import repro.core  # noqa: F401  (emulator import cycle guard)
+    from repro.core.paper_models import PAPER_DNNS, PLATFORMS
+    from repro.core.predictor import calibrate_overhead, preprocess_profile
+    from repro.emulator.cluster import FleetEmulator, profile_single_worker
+
+    plat = PLATFORMS["private_cpu"]
+    dnn = PAPER_DNNS["alexnet"]
+    batch = 8
+    topo = Topology(
+        workers=(Node("h0", nic=2.0),)
+        + tuple(Node(f"w{i}") for i in range(4)),
+        placement=Placement(("h0",)), bandwidth=plat.bandwidth)
+    overhead = calibrate_overhead(plat, seed=0)
+    profile = profile_single_worker(dnn, batch, plat, steps=14, seed=0)
+    tpls = preprocess_profile(profile, overhead)
+    jobs = (FleetJob(name="A", workers=("w0", "w1"), ps_hosts=("h0",),
+                     batch_size=batch, steps_per_worker=30,
+                     warmup_steps=6, seed=0, win=plat.win_mu,
+                     stall_alpha=overhead.alpha, stall_rtt=plat.rtt,
+                     service_jitter=plat.noise_bandwidth),
+            FleetJob(name="B", workers=("w2", "w3"), ps_hosts=("h0",),
+                     batch_size=batch, steps_per_worker=30,
+                     warmup_steps=6, seed=1, win=plat.win_mu,
+                     stall_alpha=overhead.alpha, stall_rtt=plat.rtt,
+                     service_jitter=plat.noise_bandwidth))
+    cfg = FleetConfig(topology=topo, jobs=jobs)
+    des = FleetSimulation(cfg).run({"A": tpls, "B": tpls}, merged=True)
+    des_tput = des.throughputs(cfg)
+
+    wl = dict(dnn=dnn, batch_size=batch, platform=plat)
+    emu = FleetEmulator(cfg, {"A": dict(wl), "B": dict(wl)})
+    emu.run(steps_per_worker=30)
+    emu_tput = emu.throughputs(warmup_steps=6)
+
+    for name in ("A", "B"):
+        rel = abs(des_tput[name] - emu_tput[name]) / emu_tput[name]
+        assert rel < 0.35, (name, des_tput[name], emu_tput[name])
