@@ -11,6 +11,13 @@ have the column, its section median is gated with the same threshold, so
 a regression that only hurts the incremental path (e.g. a lost memo or an
 over-eager full-solve fallback) fails even if absolute times stay fine.
 
+The ``general`` section also carries ``obs_overhead`` — the engine timed
+with the obs metrics registry collecting, over the same run with it off,
+both measured in one process.  This gate is **absolute** (no baseline
+column needed): the instrumentation contract in ``repro.obs.metrics``
+says collection must cost ~nothing on the hot path, so the CI-run median
+must stay at or under ``OBS_OVERHEAD_CEILING`` (2%).
+
 Two sources of noise are handled explicitly:
 
 * **Machine speed.**  The committed baseline and the CI runner are
@@ -52,6 +59,10 @@ DEFAULT_REPORT = os.path.join(
 # baseline section that a fresh CI run fails to produce is a hard error
 # (a silently dropped section would pass the gate with zero coverage)
 SECTION_NAMES = ("workloads", "general", "syncmode", "faults", "batched", "fleet")
+
+# absolute ceiling for the general-section obs_overhead column: engine
+# time with metrics collection ON over the same run with it OFF
+OBS_OVERHEAD_CEILING = 1.02
 
 
 def load(path: str) -> dict:
@@ -273,6 +284,20 @@ def fleet_rows(base: dict, samples: list[dict]) -> list[dict]:
     return rows
 
 
+def obs_overhead_values(samples: list[dict]) -> list[float]:
+    """Per-(mode, W) median ``obs_overhead`` across the CI samples'
+    general sections.  Purely a property of the fresh run — the committed
+    baseline is not consulted — so records from baselines that predate
+    the column never mask the gate."""
+    per_key: dict = {}
+    for s in samples:
+        for rec in s.get("general", []):
+            v = rec.get("obs_overhead")
+            if v is not None:
+                per_key.setdefault((rec["mode"], rec["W"]), []).append(v)
+    return [statistics.median(vs) for _, vs in sorted(per_key.items())]
+
+
 def rerun(fast: bool, skip_ref: bool, sections: list[str] | None = None) -> dict:
     """One more in-process benchmark sample, written to a throwaway path
     so the committed baseline is never touched.  ``fast`` must match the
@@ -358,7 +383,8 @@ def main() -> None:
     irows = incr_rows(base, samples) if wanted("general") else []
     brows = batched_rows(base, samples) if wanted("batched") else []
     frows = fleet_rows(base, samples) if wanted("fleet") else []
-    if not rows and not irows and not brows and not frows:
+    ovals = obs_overhead_values(samples) if wanted("general") else []
+    if not rows and not irows and not brows and not frows and not ovals:
         print(
             f"# no comparable records between {args.baseline} and "
             f"{args.ci}; nothing to gate"
@@ -373,6 +399,8 @@ def main() -> None:
             v = verdict_ratio(rs)
             if v is not None and v < floor:
                 return True
+        if ovals and statistics.median(ovals) > OBS_OVERHEAD_CEILING:
+            return True
         return False
 
     while needs_rerun() and len(samples) <= args.reruns:
@@ -392,6 +420,7 @@ def main() -> None:
         new_irows = incr_rows(base, samples) if wanted("general") else []
         new_brows = batched_rows(base, samples) if wanted("batched") else []
         new_frows = fleet_rows(base, samples) if wanted("fleet") else []
+        new_ovals = obs_overhead_values(samples) if wanted("general") else []
         if not new_rows and not new_irows and not new_brows and not new_frows:
             print(
                 "# rerun shares no records with the baseline; "
@@ -399,6 +428,7 @@ def main() -> None:
             )
             break
         rows, irows, brows, frows = new_rows, new_irows, new_brows, new_frows
+        ovals = new_ovals
 
     median_ratio = verdict_ratio(rows)
     worst = min(rows, key=lambda r: r["ratio"]) if rows else None
@@ -408,11 +438,14 @@ def main() -> None:
     batched_failed = batched_median is not None and batched_median < floor
     fleet_median = verdict_ratio(frows)
     fleet_failed = fleet_median is not None and fleet_median < floor
+    obs_median = statistics.median(ovals) if ovals else None
+    obs_failed = obs_median is not None and obs_median > OBS_OVERHEAD_CEILING
     failed = (
         (median_ratio is not None and median_ratio < floor)
         or incr_failed
         or batched_failed
         or fleet_failed
+        or obs_failed
     )
     if rows:
         print(f"section,workload,W,{metric}_base,{metric}_ci,ratio")
@@ -450,6 +483,10 @@ def main() -> None:
         "fleet_rows": frows,
         "fleet_median_ratio": fleet_median,
         "fleet_failed": fleet_failed,
+        "obs_overhead_values": ovals,
+        "obs_overhead_median": obs_median,
+        "obs_overhead_ceiling": OBS_OVERHEAD_CEILING,
+        "obs_failed": obs_failed,
         "failed": failed,
     }
     os.makedirs(os.path.dirname(args.report) or ".", exist_ok=True)
@@ -477,6 +514,13 @@ def main() -> None:
             f"# fleet-engine gate {state}: fleet-section median "
             f"fleet_ratio {fleet_median:.2f}x of baseline "
             f"(floor {floor:.2f}, {len(frows)} record(s))"
+        )
+    if obs_median is not None:
+        state = "REGRESSION" if obs_failed else "OK"
+        print(
+            f"# obs-overhead gate {state}: general-section median "
+            f"metrics-on/off ratio {obs_median:.3f} "
+            f"(ceiling {OBS_OVERHEAD_CEILING:.2f}, {len(ovals)} record(s))"
         )
     if failed:
         where = (

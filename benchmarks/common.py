@@ -6,6 +6,12 @@ import os
 import time
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+LEDGER_PATH = os.path.join(RESULTS_DIR, "ledger.jsonl")
+
+# save_json is each figure driver's single exit point, so the wall time
+# between module import and save is a good-enough per-figure wall clock
+# for the run ledger (drivers run one figure per process).
+_T_IMPORT = time.time()
 
 
 def save_json(name: str, payload) -> str:
@@ -13,7 +19,22 @@ def save_json(name: str, payload) -> str:
     path = os.path.join(RESULTS_DIR, f"{name}.json")
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)
+    _ledger_append(name, payload)
     return path
+
+
+def _ledger_append(name: str, payload) -> None:
+    """Append a run-ledger record for a figure result.  Best-effort by
+    design: the ledger must never break the benchmark that feeds it."""
+    try:
+        from repro.obs import ledger
+        if not isinstance(payload, dict):
+            return
+        rec = ledger.figure_record(name, payload,
+                                   wall_s=time.time() - _T_IMPORT)
+        ledger.append(rec, path=LEDGER_PATH)
+    except Exception:
+        pass
 
 
 def row(*cells) -> str:

@@ -24,6 +24,7 @@ from repro.core.simulator import SimConfig, Simulation
 from repro.core.simulator_ref import ReferenceSimulation
 from repro.core.sweep import default_pool_size, parallel_map, simulate_task
 from repro.core.topology import Topology
+from repro.obs import metrics as obs_metrics
 
 DEFAULT_OUT = os.path.join(os.path.dirname(__file__), os.pardir,
                            "BENCH_sim.json")
@@ -171,13 +172,25 @@ def run(fast: bool = False, skip_ref: bool = False,
         )
         out["general"] = []
         print("general,mode,W,engine_s,batch_s,ref_s,speedup,incr_speedup,"
-              "events,events_per_s")
+              "obs_overhead,events,events_per_s")
     for mode, kw in general_cases:
         for w in workers:
             def cfg_fn(rep, kw=kw):
                 return make_cfg(sp, seed=rep, **kw)
             t_new, events, tput_new = time_engine(
                 Simulation, tpls2, cfg_fn, w, reps)
+
+            # same engine, same seeds, obs metrics collection ON: the
+            # instrumentation contract (plain local counters, publication
+            # at run end only) says this must cost ~nothing, and
+            # check_regression gates the median on/off ratio at 2%
+            obs_metrics.enable()
+            try:
+                t_obs, _eo, _to = time_engine(
+                    Simulation, tpls2, cfg_fn, w, reps)
+            finally:
+                obs_metrics.disable()
+                obs_metrics.reset()
 
             def cfg_fn_batch(rep, kw=kw):
                 return make_cfg(sp, seed=rep, waterfill="batch", **kw)
@@ -196,6 +209,8 @@ def run(fast: bool = False, skip_ref: bool = False,
                    "batch_s": t_batch, "ref_s": t_ref,
                    "speedup": (t_ref / t_new) if t_ref else None,
                    "incr_speedup": t_batch / t_new,
+                   "metrics_on_s": t_obs,
+                   "obs_overhead": t_obs / t_new,
                    "events": events, "events_per_s": events / t_new,
                    "throughput": tput_new, "throughput_ref": tput_ref,
                    **scalar_meta}
@@ -204,6 +219,7 @@ def run(fast: bool = False, skip_ref: bool = False,
                   f"{t_ref if t_ref is None else round(t_ref, 3)},"
                   f"{rec['speedup'] and round(rec['speedup'], 2)},"
                   f"{rec['incr_speedup']:.2f},"
+                  f"{rec['obs_overhead']:.2f},"
                   f"{events},{events / t_new:.0f}", flush=True)
 
     # synchronization-mode path (repro.core.syncmode): the step-barrier

@@ -537,6 +537,11 @@ class IncrementalWaterfill:
                       "memo_hits": 0, "resolved_conns": 0,
                       "active_conn_events": 0, "scale_events": 0}
 
+    def metrics_snapshot(self) -> Dict[str, int]:
+        """A copy of the solver's work profile (``stats``) for
+        publication into ``trace.meta["metrics"]`` / the obs registry."""
+        return dict(self.stats)
+
     # ------------------------------------------------------------ mutation
 
     @property

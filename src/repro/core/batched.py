@@ -51,11 +51,12 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..obs import metrics as obs_metrics
 from .bandwidth import EqualShareModel
 from .events import LINK, StepTemplate, Trace
 from .simulator import SimConfig, Simulation, compile_template
 
-__all__ = ["Scenario", "classify", "run_scenarios"]
+__all__ = ["Scenario", "classify", "fallback_histogram", "run_scenarios"]
 
 # Tie/punt window: a superset of every scalar batching epsilon
 # (_EPS_COMPUTE = 1e-9, _EPS_REJOIN = 1e-15, _EPS_LINK = 1e-15 + t*1e-15).
@@ -95,7 +96,7 @@ def classify(cfg: SimConfig, num_workers: int) -> Optional[str]:
         return "non-uniform bandwidth model (general waterfill path)"
     if cfg.link_policy not in ("http2", "fifo"):
         return f"link_policy={cfg.link_policy!r}"
-    if cfg.record_trace or cfg.record_op_times:
+    if cfg.record_trace or cfg.record_op_times or cfg.record_rates:
         return "per-op trace recording"
     if cfg.worker_speed or cfg.res_speed:
         return "heterogeneous compute speeds"
@@ -135,6 +136,19 @@ def _fallback_category(reason: str) -> str:
     if reason.startswith("punt:"):
         return "punt"
     return "other"
+
+
+def fallback_histogram(traces: Sequence[Optional[Trace]]) -> Dict[str, int]:
+    """Per-category counts of scalar fallbacks over a result list (the
+    ``meta["batch_fallback_reason"]`` categories of :func:`run_scenarios`)."""
+    hist: Dict[str, int] = {}
+    for tr in traces:
+        if tr is None:
+            continue
+        cat = tr.meta.get("batch_fallback_reason")
+        if cat:
+            hist[cat] = hist.get(cat, 0) + 1
+    return hist
 
 
 def _scalar_run(sc: Scenario, reason: str) -> Trace:
@@ -1098,4 +1112,11 @@ def run_scenarios(scenarios: Sequence[Scenario], engine: str = "auto",
                 else:
                     out[idx] = _scalar_run(scenarios[idx],
                                            f"punt: {punted[k]}")
+    if obs_metrics.enabled():
+        obs_metrics.inc("batched.scenarios", len(scenarios))
+        obs_metrics.inc("batched.lockstep", sum(
+            1 for tr in out
+            if tr is not None and tr.meta.get("engine") == "batched"))
+        for cat, n in fallback_histogram(out).items():
+            obs_metrics.inc(f"batched.fallback.{cat}", n)
     return out  # type: ignore[return-value]

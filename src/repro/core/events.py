@@ -369,6 +369,17 @@ class Trace:
                     n += 1
         return n * batch_size / (window_end - window_start)
 
+    def to_chrome_trace(self, templates=None,
+                        trace_name: str = "repro") -> dict:
+        """This trace as a Chrome trace-event dict (Perfetto /
+        ``chrome://tracing``).  Pass the run's step templates to get
+        exact dependency flow arrows; see :mod:`repro.obs.trace_export`.
+        Requires a ``record_trace=True`` run (otherwise there are no
+        records to lay out)."""
+        from repro.obs.trace_export import to_chrome_trace
+        return to_chrome_trace(self, templates=templates,
+                               trace_name=trace_name)
+
     def recovery_times(self) -> List[float]:
         """Per-incident recovery time (t_up - t_down), worker churn and PS
         failover alike, in schedule order."""

@@ -58,6 +58,8 @@ import random
 from dataclasses import dataclass, field
 from typing import Dict, List, Mapping, Optional, Sequence, Set, Tuple
 
+from ..obs import metrics as obs_metrics
+from ..obs.timeline import LinkTimeline
 from .bandwidth import BandwidthModel, IncrementalWaterfill, _direction_of
 from .collectives import ALGORITHMS, collective_rounds
 from .events import (LINK, Chunk, LiveOp, Op, ResourceSpec, StepTemplate,
@@ -589,8 +591,10 @@ class FleetSimulation:
         coll_of: Dict[Tuple[int, str], tuple] = {}
         coll_cid = itertools.count()
 
-        # contention timelines: (t, gres, active_count) transitions
-        contention: List[Tuple[float, str, int]] = []
+        # contention timelines: (t, gres, active_count) transitions —
+        # shared recorder also consumed by the Chrome-trace exporter
+        # (repro.obs.trace_export.timeline_counter_events)
+        contention = LinkTimeline()
         record_contention = cfg.record_contention
 
         tpl_cache: Dict[Tuple[int, int], tuple] = {}
@@ -647,7 +651,7 @@ class FleetSimulation:
                 epoch = conn_epoch.get(key, 0) + 1
                 conn_epoch[key] = epoch
                 if not was_active and record_contention:
-                    contention.append((t, gname, len(link.active)))
+                    contention.record(t, gname, len(link.active))
                 if was_active and not shares_dirty:
                     r = cur_shares.get(key, 0.0) * B
                     conn_rate[key] = r
@@ -847,7 +851,7 @@ class FleetSimulation:
                     if gw in link.active:
                         link.active.discard(gw)
                         if record_contention:
-                            contention.append((t, gname, len(link.active)))
+                            contention.record(t, gname, len(link.active))
                         shares_dirty = True
                         conn_epoch[key] = conn_epoch.get(key, 0) + 1
                         conn_rate.pop(key, None)
@@ -1069,7 +1073,7 @@ class FleetSimulation:
                         link = links[gname]
                         link.active.discard(gw)
                         if record_contention:
-                            contention.append((t, gname, len(link.active)))
+                            contention.record(t, gname, len(link.active))
                         shares_dirty = True
                         iwf.remove(key)
 
@@ -1103,10 +1107,11 @@ class FleetSimulation:
             "waterfill": dict(iwf.stats),
         }
         if record_contention:
-            timelines: Dict[str, List[Tuple[float, int]]] = {}
-            for te, gname, n in contention:
-                timelines.setdefault(gname, []).append((te, n))
-            meta["contention"] = timelines
+            meta["contention"] = contention.fold()
+        if obs_metrics.enabled():
+            wf = iwf.metrics_snapshot()
+            obs_metrics.merge_run("fleet.waterfill", wf)
+            meta["metrics"] = {"waterfill": wf}
         return FleetTrace(jobs=out, meta=meta)
 
 

@@ -245,10 +245,24 @@ class PredictionRun:
         fans the runs across cores (same seeds, same mean); sweeping many
         worker counts is better served by ``sweep.predict_many``.
         """
+        import time as _time
+
         from repro.core.sweep import parallel_map, simulate_task
+        from repro.obs import ledger
         tasks = self.prediction_tasks(num_workers, n_runs)
+        t0 = _time.perf_counter()
         outs = parallel_map(simulate_task, tasks, parallel=parallel)
-        return sum(outs) / len(outs)
+        predicted = sum(outs) / len(outs)
+        if ledger.resolve_path() is not None:
+            ledger.log(
+                "predict",
+                config={"dnn": self.dnn, "batch_size": self.batch_size,
+                        "platform": self.platform, "num_ps": self.num_ps,
+                        "num_workers": num_workers, "n_runs": n_runs,
+                        "seed": self.seed},
+                engine="scalar", predicted=predicted,
+                wall_s=_time.perf_counter() - t0)
+        return predicted
 
     def measure_mean(self, num_workers: int, steps: int = 150,
                      n_runs: int = 3, parallel: bool = False) -> float:

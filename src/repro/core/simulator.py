@@ -40,6 +40,7 @@ import random
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
+from ..obs import metrics as obs_metrics
 from .bandwidth import BandwidthModel, EqualShareModel, IncrementalWaterfill
 from .events import (COMPUTE, LINK, Chunk, LiveOp, ResourceSpec,
                      StepTemplate, Trace)
@@ -106,6 +107,11 @@ class SimConfig:
     seed: int = 0
     record_trace: bool = False
     record_op_times: bool = False     # per-op (start, end); Table 1 validation
+    # Sample per-link allocated rate + active-connection count at every
+    # rate change into ``trace.rate_log`` — the Chrome-trace counter
+    # tracks of ``repro.obs.trace_export``.  Off by default (the log can
+    # dwarf the trace on long runs) and, like record_trace, unbatchable.
+    record_rates: bool = False
     # Credit-based flow control: after a WIN-limited burst, the preempted
     # remainder becomes eligible only once the receiver has consumed the
     # burst and returned a WINDOW_UPDATE.  Modeled as
@@ -370,6 +376,16 @@ class Simulation:
         completed: Dict[int, int] = {w: 0 for w in workers}
         sample_idx: Dict[int, int] = {w: 0 for w in workers}
         op_times: List[Tuple[int, int, str, str, float, float]] = []
+        # observability: run-local counters are plain ints kept
+        # unconditionally (an increment next to a heappush is noise);
+        # whether they get *published* is decided once per run here, so
+        # the metrics-off path differs only by skipped publication.
+        collect = obs_metrics.enabled()
+        stale_drops = 0    # lazily-invalidated calendar entries discarded
+        reproj = 0         # link/conn re-projections issued at batch end
+        # (t, link, allocated B/s, active conns) samples at rate changes
+        rate_log: Optional[List[Tuple[float, str, float, int]]] = \
+            [] if cfg.record_rates else None
 
         # fault state: down set, per-worker incarnation (orphans stale
         # rejoins/projections of killed steps), per-link capacity scales
@@ -610,9 +626,20 @@ class Simulation:
                         "recovery": inc.t_up - inc.t_down,
                         "factor": inc.factor})
 
+        def sample_link_rates(t: float) -> None:
+            """General path: per-link allocated-rate totals off the
+            per-connection rates (record_rates runs only)."""
+            tot: Dict[str, float] = {}
+            cnt: Dict[str, int] = {}
+            for (_w, rname), r in conn_rate.items():
+                tot[rname] = tot.get(rname, 0.0) + r
+                cnt[rname] = cnt.get(rname, 0) + 1
+            for rname in sorted(tot):
+                rate_log.append((t, rname, tot[rname], cnt[rname]))
+
         def finalize_batch(t: float) -> None:
             """Refresh rates/projections for links touched in this batch."""
-            nonlocal shares_dirty
+            nonlocal shares_dirty, reproj
             if uniform:
                 for rname in dirty_links:
                     link = links[rname]
@@ -625,6 +652,8 @@ class Simulation:
                         sc = link_scale.get(rname)
                         if sc is not None:
                             link.rate *= sc   # degradation epoch in force
+                    if rate_log is not None:
+                        rate_log.append((t, rname, link.rate * n, n))
                     link.epoch += 1
                     if fault_mode:
                         # crashed workers leave dead heap entries behind;
@@ -639,6 +668,7 @@ class Simulation:
                             calendar,
                             (t + (dt if dt > 0.0 else 0.0), next(cal_seq),
                              _K_LINK, rname, link.epoch))
+                        reproj += 1
                 dirty_links.clear()
             elif shares_dirty:
                 if iwf is not None:
@@ -670,6 +700,9 @@ class Simulation:
                                 calendar,
                                 (t + (rem if rem > 0.0 else 0.0) / r_new,
                                  next(cal_seq), _K_CONN, key, epoch))
+                            reproj += 1
+                    if rate_log is not None:
+                        sample_link_rates(t)
                     shares_dirty = False
                     return
                 cur_shares.clear()
@@ -694,6 +727,9 @@ class Simulation:
                             calendar,
                             (t + (rem if rem > 0.0 else 0.0) / r_new,
                              next(cal_seq), _K_CONN, key, epoch))
+                        reproj += 1
+                if rate_log is not None:
+                    sample_link_rates(t)
                 shares_dirty = False
 
         # ---- main loop ----
@@ -729,6 +765,7 @@ class Simulation:
                 e = heapq.heappop(calendar)
                 if entry_valid(e):
                     break
+                stale_drops += 1
             if e[0] > t:
                 t = e[0]
             batch = [e]
@@ -749,6 +786,8 @@ class Simulation:
                 heapq.heappop(calendar)
                 if entry_valid(e2):
                     batch.append(e2)
+                else:
+                    stale_drops += 1
 
             # -- fault edges first: crashes must orphan their worker's
             # chunks before this batch's rejoins/completions are processed
@@ -888,6 +927,7 @@ class Simulation:
             finalize_batch(t)
 
         trace.meta = {  # type: ignore[attr-defined]
+            "engine": "scalar",
             "num_workers": num_workers,
             "steps_per_worker": cfg.steps_per_worker,
             "sim_end_time": t,
@@ -907,6 +947,23 @@ class Simulation:
             # solver work profile: lets tests assert that candidate
             # evaluation issues only group-local re-solves
             trace.meta["waterfill"] = dict(iwf.stats)  # type: ignore[attr-defined]
+        if cfg.record_trace or cfg.record_rates:
+            # lets the Chrome exporter classify tracks without guessing
+            # from resource basenames
+            trace.meta["link_resources"] = sorted(  # type: ignore[attr-defined]
+                r for r, v in is_link.items() if v)
+        if rate_log is not None:
+            trace.rate_log = rate_log  # type: ignore[attr-defined]
+        if collect:
+            cal_stats = {"events": n_events, "stale_drops": stale_drops,
+                         "batch_drains": guard, "reprojections": reproj}
+            run_metrics: Dict[str, Dict[str, int]] = {"calendar": cal_stats}
+            obs_metrics.merge_run("sim.calendar", cal_stats)
+            if iwf is not None:
+                run_metrics["waterfill"] = iwf.metrics_snapshot()
+                obs_metrics.merge_run("sim.waterfill",
+                                      run_metrics["waterfill"])
+            trace.meta["metrics"] = run_metrics  # type: ignore[attr-defined]
         if cfg.record_op_times:
             trace.op_times = op_times  # type: ignore[attr-defined]
         return trace

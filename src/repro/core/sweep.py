@@ -39,6 +39,8 @@ from concurrent.futures import ProcessPoolExecutor
 from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 
 from repro.core.simulator import SimConfig, Simulation
+from repro.obs import ledger
+from repro.obs import metrics as obs_metrics
 
 __all__ = [
     "parallel_map", "predict_many", "measure_many", "sweep_parallel",
@@ -234,6 +236,8 @@ def simulate_all(tasks: Sequence[SimTask],
     instead of a fresh per-call pool (templates then ride inside each
     task rather than via the initializer — the executor reuse is the
     win there)."""
+    if obs_metrics.enabled():
+        obs_metrics.inc("sweep.tasks", len(tasks))
     if batch:
         return simulate_batched(tasks, templates=templates)
     amb = _ambient_pool
@@ -410,13 +414,41 @@ def sweep_parallel(run, workers: Sequence[int], measure_steps: int = 100,
                    parallel: bool = True,
                    max_workers: Optional[int] = None) -> Dict[str, list]:
     """Predicted vs measured curves (one paper sub-figure), all tasks in one
-    pool.  Same output dict as ``predictor.sweep`` with identical seeds."""
+    pool.  Same output dict as ``predictor.sweep`` with identical seeds.
+    (With ``repro.obs.metrics`` collection on, the dict gains a
+    ``"metrics"`` key — sweep queue/latency stats — and, when the run
+    ledger is on, a ``sweep`` record is appended.)"""
+    import time as _time
     from repro.core.predictor import prediction_error
+    t0 = _time.perf_counter()
     pred, meas = predict_and_measure(
         run, workers, n_runs=n_runs, measure_steps=measure_steps,
         measure_runs=measure_runs, parallel=parallel,
         max_workers=max_workers)
+    wall = _time.perf_counter() - t0
     p = [pred[w] for w in workers]
     m = [meas[w] for w in workers]
-    return {"workers": list(workers), "predicted": p, "measured": m,
-            "error": [prediction_error(a, b) for a, b in zip(p, m)]}
+    errs = [prediction_error(a, b) for a, b in zip(p, m)]
+    out = {"workers": list(workers), "predicted": p, "measured": m,
+           "error": errs}
+    n_tasks = len(workers) * (n_runs + measure_runs)
+    if obs_metrics.enabled():
+        obs_metrics.inc("sweep.runs")
+        obs_metrics.inc("sweep.tasks", n_tasks)
+        obs_metrics.observe("sweep.wall_s", wall)
+        out["metrics"] = {"tasks": n_tasks, "wall_s": wall,
+                          "tasks_per_s": n_tasks / wall if wall > 0 else 0.0}
+    if ledger.resolve_path() is not None:
+        ledger.log(
+            "sweep",
+            config={"dnn": getattr(run, "dnn", None),
+                    "batch_size": getattr(run, "batch_size", None),
+                    "platform": getattr(run, "platform", None),
+                    "num_ps": getattr(run, "num_ps", None),
+                    "workers": list(workers), "n_runs": n_runs,
+                    "measure_steps": measure_steps},
+            engine="scalar", wall_s=wall,
+            mean_err=sum(errs) / len(errs) if errs else None,
+            max_err=max(errs) if errs else None,
+            extra={"workers": list(workers)})
+    return out

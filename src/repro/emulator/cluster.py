@@ -838,6 +838,15 @@ class ClusterEmulator:
 
     # ------------------------------------------------------------ public API
 
+    def to_chrome_trace(self) -> dict:
+        """The emulator's profiling records as a Chrome trace-event dict
+        (Perfetto / ``chrome://tracing``).  Requires a
+        ``record_profile=True`` run; flow arrows follow the recorded op
+        dependency indices exactly.  See :mod:`repro.obs.trace_export`."""
+        from repro.obs.trace_export import recorded_steps_to_chrome_trace
+        return recorded_steps_to_chrome_trace(self.profiled_steps,
+                                              incidents=self.incidents)
+
     def _measurement_window(self, warmup_steps: int,
                             window: str) -> Tuple[float, float]:
         """Same boundary logic as ``Trace.measurement_window``, including

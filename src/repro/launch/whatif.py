@@ -126,6 +126,23 @@ def build_whatif_topology(num_workers: int, num_ps: int,
                     placement=placement)
 
 
+def export_ps_trace(run, num_workers: int, path: str) -> None:
+    """One representative seeded DES run of ``run`` at ``num_workers``
+    workers, exported as Chrome trace-event JSON (per-worker compute /
+    transmission tracks, dependency flow arrows, fault markers, per-link
+    rate counter tracks).  Open the file in https://ui.perfetto.dev."""
+    from repro.core.simulator import Simulation
+    from repro.obs.trace_export import write_chrome_trace
+    cfg, templates, W, _b, _w = run.prediction_tasks(num_workers, 1)[0]
+    cfg.record_trace = True
+    cfg.record_rates = True
+    trace = Simulation(cfg).run(templates, W)
+    doc = trace.to_chrome_trace(templates=templates)
+    write_chrome_trace(doc, path)
+    print(f"# exported Chrome trace -> {path} "
+          f"({len(doc['traceEvents'])} events; open in ui.perfetto.dev)")
+
+
 def ps_cluster_main(args) -> None:
     from repro.core.predictor import PredictionRun
     from repro.core.sweep import predict_many
@@ -174,6 +191,7 @@ def ps_cluster_main(args) -> None:
             print(f"# staleness W={w}: mean={st['mean']:.2f} "
                   f"p50={st['p50']:.0f} p99={st['p99']:.0f} "
                   f"max={st['max']:.0f} versions={st['versions']}")
+    fault_spec = None
     if args.mttf or args.preempt_rate or args.degrade_links:
         from dataclasses import replace
 
@@ -186,6 +204,7 @@ def ps_cluster_main(args) -> None:
                          degrade_period=args.degrade_period,
                          degrade_duration=args.degrade_duration,
                          fault_seed=args.fault_seed)
+        fault_spec = spec
         churn = replace(base.with_topology(topo), faults=spec)
         print(f"# failure/churn scenario: mttf={args.mttf} mttr={args.mttr} "
               f"preempt_rate={args.preempt_rate} "
@@ -200,6 +219,21 @@ def ps_cluster_main(args) -> None:
     if args.optimize_placement:
         optimize_placement_report(base, topo, wmax,
                                   strategy=args.optimize_placement)
+    if args.export_trace:
+        run_t = base.with_topology(topo)
+        if fault_spec is not None:
+            from dataclasses import replace as _replace
+            run_t = _replace(run_t, faults=fault_spec)
+        export_ps_trace(run_t, wmax, args.export_trace)
+    from repro.obs import ledger
+    ledger.log("whatif", figure="whatif_ps",
+               config={"dnn": args.dnn, "batch": args.batch,
+                       "platform": args.cluster_platform,
+                       "num_ps": args.num_ps, "oversub": args.oversub,
+                       "ps_nic": args.ps_nic, "sync": args.sync_mode,
+                       "workers": list(args.workers)},
+               engine="scalar",
+               extra={"predicted": [pred_topo[w] for w in args.workers]})
 
 
 def optimize_placement_report(base, topo, num_workers: int,
@@ -422,6 +456,20 @@ def fleet_main(args) -> None:
             print(f"{name:>8s} {w:3d} {t:10.2f} {was:10.2f} "
                   f"{delta:+7.1f} {share:6.3f}")
         print(f"# jain fairness index = {sjain:.4f} (was {jain:.4f})")
+    if args.export_trace:
+        # rerun the contended fleet with contention timelines on; the
+        # counter tracks come from the same LinkTimeline machinery that
+        # feeds meta["contention"] (fig_fleet's timelines)
+        from repro.core.fleet import FleetSimulation
+        from repro.obs.trace_export import (fleet_to_chrome_trace,
+                                            write_chrome_trace)
+        ccfg = FleetConfig(topology=cfg.topology, jobs=cfg.jobs,
+                           record_contention=True)
+        ftr = FleetSimulation(ccfg).run(steps, merged=True)
+        doc = fleet_to_chrome_trace(ftr)
+        write_chrome_trace(doc, args.export_trace)
+        print(f"# exported Chrome trace -> {args.export_trace} "
+              f"({len(doc['traceEvents'])} events; open in ui.perfetto.dev)")
 
 
 def main() -> None:
@@ -504,6 +552,15 @@ def main() -> None:
     ap.add_argument("--fault-seed", type=int, default=0,
                     help="seed of the dedicated fault-schedule RNG "
                          "(the simulation RNG is never touched)")
+    ap.add_argument("--export-trace", metavar="OUT_JSON", default=None,
+                    help="write a Chrome trace-event JSON (open in "
+                         "https://ui.perfetto.dev): PS-cluster mode "
+                         "exports one seeded DES run at the largest "
+                         "worker count (per-worker compute/transmission "
+                         "tracks, dependency flow arrows, fault markers, "
+                         "per-link rate counters); fleet mode exports "
+                         "per-job step timelines plus the shared fabric's "
+                         "contention counters")
     ap.add_argument("--profile-steps", type=int, default=30)
     ap.add_argument("--sim-steps", type=int, default=250)
     ap.add_argument("--waterfill", default="auto",
@@ -522,6 +579,10 @@ def main() -> None:
     if args.straggler_worker < 1.0:
         ap.error(f"--straggler-worker is a slowdown factor and must be "
                  f">= 1, got {args.straggler_worker}")
+    if args.export_trace and not (args.ps_cluster or args.fleet):
+        ap.error("--export-trace requires --ps-cluster or --fleet (the "
+                 "TPU adapter is analytic — there is no DES trace to "
+                 "export)")
     if not args.ps_cluster:
         # PS-cluster-only knobs must not be silently ignored in TPU mode
         # (--straggler-worker is easy to confuse with TPU-mode --straggler)
@@ -547,6 +608,14 @@ def main() -> None:
     if args.optimize_placement and args.sync_mode == "allreduce":
         ap.error("--optimize-placement searches PS shard placements; "
                  "the allreduce regime has no parameter servers")
+
+    # run ledger: whatif runs append to the repo ledger when launched
+    # from the repo root (REPRO_LEDGER still overrides; =0 disables)
+    import os
+
+    from repro.obs import ledger
+    if os.path.isdir("benchmarks"):
+        ledger.enable(os.path.join("benchmarks", "results", "ledger.jsonl"))
 
     if args.fleet:
         fleet_main(args)

@@ -1,0 +1,388 @@
+"""Unified observability layer (repro.obs) acceptance gates.
+
+Covers the PR's acceptance criteria at unit-test granularity:
+
+  * a frozen crash-injected scenario (W=2, one PS shard) exports a
+    Chrome trace with per-worker compute/transmission tracks, at least
+    one flow arrow, a crash instant marker and a per-link rate counter
+    track — asserted structurally, plus a JSON round-trip and a clean
+    pass through the ``repro.obs.view`` validator;
+  * all three engines (scalar, batched, fleet) emit ``trace.meta``
+    conforming to the one documented schema (``repro.obs.schema``),
+    strict mode — an undocumented key is a test failure, so the schema
+    doc cannot silently rot;
+  * the metrics registry is a no-op while disabled and collects
+    counters/gauges/histograms while enabled; engines publish their
+    run stats through it without changing simulation results;
+  * the run ledger appends one line-delimited JSON record per run with
+    a stable config digest, and ``repro.obs.report`` summarizes error
+    bands and flags drift between two ledgers.
+"""
+import json
+
+import pytest
+
+from repro.core.bandwidth import BandwidthModel
+from repro.core.batched import Scenario, fallback_histogram, run_scenarios
+from repro.core.events import Op, StepTemplate, ps_resources
+from repro.core.faults import FaultSpec
+from repro.core.simulator import SimConfig, Simulation
+from repro.obs import ledger, metrics
+from repro.obs.schema import validate_meta, validate_trace_meta
+from repro.obs.timeline import LinkTimeline
+from repro.obs.trace_export import (fleet_to_chrome_trace,
+                                    timeline_counter_events,
+                                    write_chrome_trace)
+from repro.obs.view import summarize as view_summarize
+from repro.obs.view import validate_chrome_trace
+
+BW = 1e8
+
+
+def _tpls():
+    ops = [Op("c0", "worker", duration=0.05),
+           Op("pull", "downlink", size=2e6),
+           Op("push", "uplink", size=2e6, deps=(0, 1))]
+    return [StepTemplate(ops=ops)]
+
+
+def _cfg(**over):
+    kw = dict(resources=ps_resources(BW, 1), link_policy="http2",
+              win=2.8e6, steps_per_worker=12, warmup_steps=2, seed=3)
+    kw.update(over)
+    return SimConfig(**kw)
+
+
+@pytest.fixture(scope="module")
+def crash_doc():
+    """The frozen acceptance scenario: W=2, one PS shard, one injected
+    crash, full trace + rate recording, exported to Chrome JSON."""
+    tpls = _tpls()
+    cfg = _cfg(record_trace=True, record_rates=True,
+               bandwidth_model=BandwidthModel(),
+               faults=FaultSpec(crashes=((0.4, 0),), mttr=0.3))
+    trace = Simulation(cfg).run(tpls, 2)
+    return trace, trace.to_chrome_trace(templates=tpls)
+
+
+# ------------------------------------------------------------ trace export
+
+
+def test_chrome_trace_structure(crash_doc):
+    trace, doc = crash_doc
+    evs = doc["traceEvents"]
+    assert evs and doc["displayTimeUnit"] == "ms"
+
+    # per-worker process tracks with compute and transmission threads
+    names = {(e["pid"], e["args"]["name"]) for e in evs
+             if e["ph"] == "M" and e["name"] == "thread_name"}
+    tracks = {n for _, n in names}
+    assert {"worker", "downlink", "uplink"} <= tracks
+    worker_pids = {e["pid"] for e in evs
+                   if e["ph"] == "M" and e["name"] == "process_name"
+                   and e["args"]["name"].startswith("worker ")}
+    assert len(worker_pids) == 2
+
+    # duration events on both categories
+    cats = {e["cat"] for e in evs if e["ph"] == "X"}
+    assert cats == {"compute", "transmission"}
+
+    # >= 1 flow arrow, every start paired with a finish by id
+    starts = {e["id"] for e in evs if e["ph"] == "s"}
+    finishes = {e["id"] for e in evs if e["ph"] == "f"}
+    assert starts and starts == finishes
+
+    # crash + recovery instant markers
+    inames = {e["name"] for e in evs if e["ph"] == "i"}
+    assert "crash:0" in inames and "recover:crash:0" in inames
+
+    # per-link rate counter tracks from record_rates
+    counters = {e["name"] for e in evs if e["ph"] == "C"}
+    assert {"rate downlink", "rate uplink"} <= counters
+
+    # monotone timestamps, all finite and non-negative
+    ts = [e["ts"] for e in evs]
+    assert ts == sorted(ts) and ts[0] >= 0.0
+
+
+def test_chrome_trace_round_trip_and_validator(crash_doc, tmp_path):
+    _, doc = crash_doc
+    assert validate_chrome_trace(doc) == []
+    again = json.loads(json.dumps(doc))
+    assert again == doc
+    path = str(tmp_path / "trace.json")
+    write_chrome_trace(doc, path)
+    with open(path) as f:
+        assert json.load(f)["traceEvents"] == doc["traceEvents"]
+    summary = view_summarize(doc)
+    assert summary["events"] == len(doc["traceEvents"])
+    assert summary["span_ms"] > 0.0
+
+
+def test_validator_catches_broken_traces(crash_doc):
+    _, doc = crash_doc
+    broken = {"traceEvents": [dict(e) for e in doc["traceEvents"]]}
+    # unpaired flow start
+    broken["traceEvents"].append(
+        {"ph": "s", "pid": 1, "tid": 0, "ts": 1.0, "id": 999999,
+         "name": "dangling", "cat": "flow"})
+    assert any("flow" in p for p in validate_chrome_trace(broken))
+    # timestamp regression
+    bad_ts = {"traceEvents": [
+        {"ph": "i", "s": "g", "pid": 0, "tid": 0, "ts": 5.0, "name": "a"},
+        {"ph": "i", "s": "g", "pid": 0, "tid": 0, "ts": 1.0, "name": "b"}]}
+    assert any("ts" in p or "order" in p
+               for p in validate_chrome_trace(bad_ts))
+    assert validate_chrome_trace({}) != []
+
+
+# ------------------------------------------------------------- meta schema
+
+
+def test_scalar_meta_schema_strict(crash_doc):
+    trace, _ = crash_doc
+    assert validate_trace_meta(trace, strict=True) == []
+    assert trace.meta["engine"] == "scalar"
+    assert trace.meta["link_resources"] == ["downlink", "uplink"]
+
+
+def test_batched_meta_schema_strict():
+    tpls = _tpls()
+    scs = [Scenario(_cfg(seed=s), tpls, 2) for s in range(3)]
+    out = run_scenarios(scs)
+    for tr in out:
+        assert validate_trace_meta(tr, strict=True) == []
+        assert tr.meta["engine"] in ("batched", "scalar")
+    hist = fallback_histogram(out)
+    assert sum(hist.values()) == sum(
+        1 for tr in out if tr.meta["engine"] != "batched")
+
+
+def test_fleet_meta_schema_strict(fleet_run):
+    cfg, ft = fleet_run
+    for jt in ft.jobs.values():
+        assert validate_trace_meta(jt, strict=True) == []
+
+
+def test_validate_meta_flags_problems():
+    errs = validate_meta({"engine": "warp-drive", "num_workers": "two"})
+    assert any("engine" in e for e in errs)
+    assert any("num_workers" in e for e in errs)
+    ok = {"engine": "scalar", "num_workers": 2, "steps_per_worker": 10,
+          "sim_end_time": 1.0, "num_events": 5, "sync_mode": "async",
+          "num_versions": 3, "barrier_commits": []}
+    assert validate_meta(ok) == []
+    assert validate_meta(dict(ok, bogus=1)) == []          # lenient
+    assert validate_meta(dict(ok, bogus=1), strict=True)   # strict
+
+
+# ------------------------------------------------------------ fleet export
+
+
+@pytest.fixture(scope="module")
+def fleet_run():
+    import random
+
+    from repro.core.fleet import FleetConfig, FleetJob, FleetSimulation
+    from repro.core.topology import Node, Placement, Rack, Topology
+
+    def tpl(seed):
+        rng = random.Random(seed)
+        ops = [Op("dl", "downlink", size=rng.uniform(2e6, 8e6)),
+               Op("fwd", "worker", duration=0.01, deps=(0,)),
+               Op("ul", "uplink", size=rng.uniform(2e6, 8e6), deps=(1,))]
+        return StepTemplate(ops=ops)
+
+    topo = Topology(
+        workers=(Node("h0", rack="r0", nic=2.0),)
+        + tuple(Node(f"w{i}", rack="r1") for i in range(4)),
+        racks=(Rack("r0", oversubscription=2.0), Rack("r1")),
+        placement=Placement(("h0",)), bandwidth=1e9)
+    jobs = tuple(
+        FleetJob(name=n, workers=w, seed=s, batch_size=8, ps_hosts=("h0",),
+                 steps_per_worker=10, warmup_steps=2)
+        for n, w, s in (("A", ("w0", "w1"), 0), ("B", ("w2", "w3"), 1)))
+    cfg = FleetConfig(topology=topo, jobs=jobs, record_contention=True)
+    ft = FleetSimulation(cfg).run({"A": [tpl(0)], "B": [tpl(1)]},
+                                  merged=True)
+    return cfg, ft
+
+
+def test_fleet_contention_uses_shared_timeline(fleet_run):
+    cfg, ft = fleet_run
+    cont = ft.meta["contention"]
+    assert cont and all(
+        isinstance(v, list) and all(len(p) == 2 for p in v)
+        for v in cont.values())
+    # the same fold shape a LinkTimeline produces
+    tl = LinkTimeline()
+    for name, series in cont.items():
+        for t, n in series:
+            tl.record(t, name, n)
+    assert tl.fold() == {k: [tuple(p) for p in v] for k, v in cont.items()}
+
+
+def test_fleet_chrome_trace(fleet_run):
+    cfg, ft = fleet_run
+    doc = fleet_to_chrome_trace(ft, cfg=cfg)
+    assert validate_chrome_trace(doc) == []
+    evs = doc["traceEvents"]
+    counters = {e["name"] for e in evs if e["ph"] == "C"}
+    assert any(n.startswith("active ") for n in counters)
+    assert any(e["ph"] == "i" for e in evs)   # per-job step instants
+
+
+def test_timeline_counter_events():
+    tl = LinkTimeline()
+    tl.record(0.0, "uplink", 1)
+    tl.record(0.5, "uplink", 2)
+    tl.record(0.25, "downlink", 1)
+    assert len(tl) == 3
+    evs = timeline_counter_events(tl.fold())
+    assert {e["name"] for e in evs} == {"active uplink", "active downlink"}
+    assert all(e["ph"] == "C" for e in evs)
+
+
+# ---------------------------------------------------------------- metrics
+
+
+def test_metrics_disabled_is_noop():
+    assert not metrics.enabled()
+    metrics.inc("nope")
+    metrics.gauge("nope", 1.0)
+    metrics.observe("nope", 1.0)
+    metrics.merge_run("nope", {"k": 1})
+    assert metrics.snapshot() == {}
+
+
+def test_metrics_collecting():
+    with metrics.collecting():
+        assert metrics.enabled()
+        metrics.inc("a")
+        metrics.inc("a", 2)
+        metrics.gauge("g", 1.5)
+        metrics.observe("h", 3.0)
+        metrics.observe("h", 1.0)
+        metrics.merge_run("run", {"events": 7})
+        snap = metrics.snapshot()
+    assert not metrics.enabled()
+    assert snap["counters"]["a"] == 3
+    assert snap["counters"]["run.events"] == 7
+    assert snap["gauges"]["g"] == 1.5
+    h = snap["histograms"]["h"]
+    assert (h["count"], h["sum"], h["min"], h["max"]) == (2, 4.0, 1.0, 3.0)
+    metrics.reset()
+    with metrics.collecting():
+        assert metrics.snapshot() == {}
+
+
+def test_engines_publish_metrics_without_changing_results():
+    tpls = _tpls()
+    base = Simulation(_cfg()).run(tpls, 2)
+    with metrics.collecting():
+        instrumented = Simulation(_cfg()).run(tpls, 2)
+        snap = metrics.snapshot()
+    metrics.reset()
+    assert instrumented.step_completions == base.step_completions
+    assert instrumented.meta["sim_end_time"] == base.meta["sim_end_time"]
+    assert instrumented.meta["num_events"] == base.meta["num_events"]
+    cal = instrumented.meta["metrics"]["calendar"]
+    assert cal["events"] == base.meta["num_events"]
+    assert snap["counters"]["sim.calendar.events"] == cal["events"]
+    assert "metrics" not in base.meta  # off-path publishes nothing
+
+
+def test_waterfill_stats_published():
+    tpls = _tpls()
+    with metrics.collecting():
+        tr = Simulation(_cfg(bandwidth_model=BandwidthModel())).run(tpls, 2)
+    metrics.reset()
+    wf = tr.meta["metrics"]["waterfill"]
+    assert wf["flushes"] > 0
+    assert set(wf) >= {"flushes", "full_solves", "comp_solves", "memo_hits"}
+
+
+# ----------------------------------------------------------------- ledger
+
+
+def test_ledger_round_trip(tmp_path):
+    p = str(tmp_path / "ledger.jsonl")
+    ledger.log("predict", path=p, figure="f1", config={"a": 1},
+               engine="scalar", predicted=5.0, mean_err=0.02, wall_s=1.0)
+    ledger.log("predict", path=p, figure="f1", config={"a": 1},
+               engine="scalar", predicted=5.5, mean_err=0.04, wall_s=1.5)
+    recs = ledger.read(p)
+    assert len(recs) == 2
+    assert recs[0]["kind"] == "predict"
+    assert recs[0]["config_digest"] == recs[1]["config_digest"]
+    with open(p) as f:
+        lines = f.read().strip().splitlines()
+    assert all(json.loads(ln) for ln in lines)   # one JSON object per line
+
+
+def test_ledger_config_digest_stable():
+    a = ledger.config_digest({"x": 1, "y": [2, 3]})
+    b = ledger.config_digest({"y": [2, 3], "x": 1})   # key order irrelevant
+    assert a == b and len(a) == 16
+    assert ledger.config_digest({"x": 2}) != a
+
+
+def test_ledger_figure_record():
+    payload = {"mean_err": 0.1, "max_err": 0.25,
+               "predicted": [10.0, 20.0], "rows": [{"err": 0.3}]}
+    rec = ledger.figure_record("fig22", payload, wall_s=3.0)
+    assert rec["kind"] == "figure" and rec["figure"] == "fig22"
+    assert rec["mean_err"] == 0.1 and rec["max_err"] == 0.25
+    assert rec["predicted"] == 15.0 and rec["wall_s"] == 3.0
+    # no top-level errors: collected recursively from nested rows
+    rec2 = ledger.figure_record("fx", {"rows": [{"err": 0.3}, {"err": 0.1}]})
+    assert rec2["mean_err"] == pytest.approx(0.2)
+    assert rec2["max_err"] == pytest.approx(0.3)
+
+
+def test_ledger_append_never_raises(tmp_path):
+    nested = str(tmp_path / "new-dir" / "sub" / "ledger.jsonl")
+    # missing parent directories are created
+    assert ledger.append(ledger.make_record("t", figure="f"),
+                         path=nested) == nested
+    # a genuinely unwritable path returns None instead of raising
+    assert ledger.append(ledger.make_record("t", figure="f"),
+                         path="/proc/definitely/invalid.jsonl") is None
+
+
+def test_ledger_resolve_path_env(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_LEDGER", "0")
+    assert ledger.resolve_path() is None
+    target = str(tmp_path / "env.jsonl")
+    monkeypatch.setenv("REPRO_LEDGER", target)
+    assert ledger.resolve_path() == target
+    assert ledger.resolve_path("explicit.jsonl") == "explicit.jsonl"
+
+
+# ----------------------------------------------------------------- report
+
+
+def test_report_summarize_and_compare(tmp_path):
+    from repro.obs.report import compare, summarize
+    recs = [ledger.make_record("figure", figure="f1", mean_err=e,
+                               max_err=2 * e, wall_s=1.0)
+            for e in (0.02, 0.04)]
+    s = summarize(recs)
+    assert s["f1"]["runs"] == 2
+    assert s["f1"]["mean_err_band"] == (0.02, 0.03, 0.04)
+    ok, _ = compare(recs, recs)
+    assert ok
+    drifted = [dict(r, mean_err=0.5) for r in recs]
+    ok2, lines = compare(drifted, recs)
+    assert not ok2 and any("DRIFT" in ln for ln in lines)
+
+
+def test_report_cli_compare_exit_code(tmp_path):
+    from repro.obs import report
+    new = str(tmp_path / "new.jsonl")
+    old = str(tmp_path / "old.jsonl")
+    ledger.log("figure", path=old, figure="f1", mean_err=0.02)
+    ledger.log("figure", path=new, figure="f1", mean_err=0.9)
+    assert report.main([new]) == 0
+    assert report.main([new, "--compare", old]) == 1
+    assert report.main([old, "--compare", old]) == 0
