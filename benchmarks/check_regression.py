@@ -58,7 +58,15 @@ DEFAULT_REPORT = os.path.join(
 # every record-bearing section a benchmark json can carry; a committed
 # baseline section that a fresh CI run fails to produce is a hard error
 # (a silently dropped section would pass the gate with zero coverage)
-SECTION_NAMES = ("workloads", "general", "syncmode", "faults", "batched", "fleet")
+SECTION_NAMES = (
+    "workloads",
+    "general",
+    "syncmode",
+    "faults",
+    "batched",
+    "fleet",
+    "calibrate",
+)
 
 # absolute ceiling for the general-section obs_overhead column: engine
 # time with metrics collection ON over the same run with it OFF
@@ -284,6 +292,53 @@ def fleet_rows(base: dict, samples: list[dict]) -> list[dict]:
     return rows
 
 
+def calibrate_records(bench: dict) -> dict:
+    """(section, key) -> record for the calibration-fitter section.
+    Kept out of :func:`records` for the same reason as ``batched``:
+    calibrate records carry no ``speedup`` column."""
+    out = {}
+    for rec in bench.get("calibrate", []):
+        out[("calibrate", rec["mode"], rec.get("corpus_steps", 0))] = rec
+    return out
+
+
+def calibrate_rows(base: dict, samples: list[dict]) -> list[dict]:
+    """Calibrate-section rows gating ``fit_ratio`` — one scalar DES run's
+    wall time over one extract+fit of a planted-truth corpus, measured
+    interleaved in one process (machine-independent).  A fitter slowdown
+    shows up as a ratio drop.  Older baselines without the section simply
+    produce no rows."""
+    base_recs = calibrate_records(base)
+    sample_recs = [calibrate_records(s) for s in samples]
+    rows = []
+    for key, brec in sorted(base_recs.items()):
+        bval = brec.get("fit_ratio")
+        if not bval:
+            continue
+        vals = []
+        for recs in sample_recs:
+            if key in recs:
+                v = recs[key].get("fit_ratio")
+                if v is not None:
+                    vals.append(v)
+        if not vals or len(vals) < len(sample_recs):
+            continue
+        ci_val = statistics.median(vals)
+        rows.append(
+            {
+                "section": key[0],
+                "workload": key[1],
+                "W": key[2],
+                "metric": "fit_ratio",
+                "baseline": bval,
+                "ci": ci_val,
+                "samples": vals,
+                "ratio": ci_val / bval,
+            }
+        )
+    return rows
+
+
 def obs_overhead_values(samples: list[dict]) -> list[float]:
     """Per-(mode, W) median ``obs_overhead`` across the CI samples'
     general sections.  Purely a property of the fresh run — the committed
@@ -383,8 +438,16 @@ def main() -> None:
     irows = incr_rows(base, samples) if wanted("general") else []
     brows = batched_rows(base, samples) if wanted("batched") else []
     frows = fleet_rows(base, samples) if wanted("fleet") else []
+    crows = calibrate_rows(base, samples) if wanted("calibrate") else []
     ovals = obs_overhead_values(samples) if wanted("general") else []
-    if not rows and not irows and not brows and not frows and not ovals:
+    if (
+        not rows
+        and not irows
+        and not brows
+        and not frows
+        and not crows
+        and not ovals
+    ):
         print(
             f"# no comparable records between {args.baseline} and "
             f"{args.ci}; nothing to gate"
@@ -395,7 +458,7 @@ def main() -> None:
         return statistics.median(r["ratio"] for r in rs) if rs else None
 
     def needs_rerun() -> bool:
-        for rs in (rows, irows, brows, frows):
+        for rs in (rows, irows, brows, frows, crows):
             v = verdict_ratio(rs)
             if v is not None and v < floor:
                 return True
@@ -420,15 +483,22 @@ def main() -> None:
         new_irows = incr_rows(base, samples) if wanted("general") else []
         new_brows = batched_rows(base, samples) if wanted("batched") else []
         new_frows = fleet_rows(base, samples) if wanted("fleet") else []
+        new_crows = calibrate_rows(base, samples) if wanted("calibrate") else []
         new_ovals = obs_overhead_values(samples) if wanted("general") else []
-        if not new_rows and not new_irows and not new_brows and not new_frows:
+        if (
+            not new_rows
+            and not new_irows
+            and not new_brows
+            and not new_frows
+            and not new_crows
+        ):
             print(
                 "# rerun shares no records with the baseline; "
                 "keeping prior verdict"
             )
             break
-        rows, irows, brows, frows = new_rows, new_irows, new_brows, new_frows
-        ovals = new_ovals
+        rows, irows, brows = new_rows, new_irows, new_brows
+        frows, crows, ovals = new_frows, new_crows, new_ovals
 
     median_ratio = verdict_ratio(rows)
     worst = min(rows, key=lambda r: r["ratio"]) if rows else None
@@ -438,6 +508,8 @@ def main() -> None:
     batched_failed = batched_median is not None and batched_median < floor
     fleet_median = verdict_ratio(frows)
     fleet_failed = fleet_median is not None and fleet_median < floor
+    calibrate_median = verdict_ratio(crows)
+    calibrate_failed = calibrate_median is not None and calibrate_median < floor
     obs_median = statistics.median(ovals) if ovals else None
     obs_failed = obs_median is not None and obs_median > OBS_OVERHEAD_CEILING
     failed = (
@@ -445,6 +517,7 @@ def main() -> None:
         or incr_failed
         or batched_failed
         or fleet_failed
+        or calibrate_failed
         or obs_failed
     )
     if rows:
@@ -454,7 +527,7 @@ def main() -> None:
                 f"{r['section']},{r['workload']},{r['W']},"
                 f"{r['baseline']:.3g},{r['ci']:.3g},{r['ratio']:.3f}"
             )
-    for extra in (irows, brows, frows):
+    for extra in (irows, brows, frows, crows):
         if extra:
             m = extra[0]["metric"]
             print(f"section,workload,W,{m}_base,{m}_ci,ratio")
@@ -483,6 +556,9 @@ def main() -> None:
         "fleet_rows": frows,
         "fleet_median_ratio": fleet_median,
         "fleet_failed": fleet_failed,
+        "calibrate_rows": crows,
+        "calibrate_median_ratio": calibrate_median,
+        "calibrate_failed": calibrate_failed,
         "obs_overhead_values": ovals,
         "obs_overhead_median": obs_median,
         "obs_overhead_ceiling": OBS_OVERHEAD_CEILING,
@@ -514,6 +590,13 @@ def main() -> None:
             f"# fleet-engine gate {state}: fleet-section median "
             f"fleet_ratio {fleet_median:.2f}x of baseline "
             f"(floor {floor:.2f}, {len(frows)} record(s))"
+        )
+    if calibrate_median is not None:
+        state = "REGRESSION" if calibrate_failed else "OK"
+        print(
+            f"# calibration-fitter gate {state}: calibrate-section median "
+            f"fit_ratio {calibrate_median:.2f}x of baseline "
+            f"(floor {floor:.2f}, {len(crows)} record(s))"
         )
     if obs_median is not None:
         state = "REGRESSION" if obs_failed else "OK"

@@ -89,7 +89,7 @@ def time_engine(sim_cls, tpls, cfg_fn, num_workers: int, reps: int):
 
 
 ALL_SECTIONS = ("workloads", "general", "syncmode", "faults", "batched",
-                "fleet", "sweep")
+                "fleet", "calibrate", "sweep")
 
 
 def run(fast: bool = False, skip_ref: bool = False,
@@ -428,6 +428,54 @@ def run(fast: bool = False, skip_ref: bool = False,
         print(f"# fleet: W={rec['W']} scalar {scalar_fevs:.0f} ev/s, "
               f"merged {merged_fevs:.0f} ev/s, "
               f"median ratio {rec['fleet_ratio']:.2f}x")
+
+    # calibration fitter (repro.calibrate): extract + fit_profile on a
+    # planted-truth trace corpus, timed against one scalar DES run of a
+    # comparable template in the same rep.  The gate metric is the MEDIAN
+    # per-rep ratio "fit_ratio" = sim_s / fit_s (machine-independent like
+    # batch_speedup): the closed loop refits after every observation, so
+    # a fitter that grows slower than the simulation it feeds would
+    # dominate the loop's wall time.  check_regression.py gates it.
+    if want("calibrate"):
+        from repro.calibrate.extract import extract_recorded_steps
+        from repro.calibrate.fit import fit_profile
+        from repro.calibrate.synth import (make_truth,
+                                           synthesize_parse_probes,
+                                           synthesize_steps)
+        truth = make_truth(layers=8, seed=0)
+        # fast mode keeps the FULL corpus and sim size: the ratio's two
+        # halves must match the committed baseline's record key and
+        # workload, or CI would gate against an incomparable number
+        # (same reasoning as the batched section's fixed B)
+        csteps = 150
+        corpus = synthesize_steps(truth, steps=csteps, seed=1, noise=0.05)
+        probes = synthesize_parse_probes(truth, seed=2, noise=0.05)
+        creps = 3  # median-of-3 even in fast mode (ratio gate)
+        spc = 150
+        tpls_c = [make_template(8, seed=s) for s in range(3)]
+        cratios = []
+        fit_s = sim_s = 0.0
+        prof = None
+        for rep in range(creps):
+            t0 = time.perf_counter()
+            Simulation(make_cfg(spc, seed=rep)).run(tpls_c, 4)
+            sim_s = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            samples = extract_recorded_steps(corpus)
+            samples.parse.extend(probes)
+            prof = fit_profile(samples, win_hint=2.8e7)
+            fit_s = time.perf_counter() - t0
+            cratios.append(sim_s / fit_s)
+        rec = {"mode": "planted_truth", "workload": "medium",
+               "corpus_steps": csteps,
+               "ops_fitted": len(prof.op_times),
+               "links_fitted": len(prof.link_capacity),
+               "sim_s": sim_s, "fit_s": fit_s,
+               "fit_ratio": statistics.median(cratios),
+               "cpus": ncpu, "engine": "fitter"}
+        out["calibrate"] = [rec]
+        print(f"# calibrate: corpus {csteps} steps, fit {fit_s:.3f}s vs "
+              f"sim {sim_s:.3f}s, median ratio {rec['fit_ratio']:.2f}x")
 
     # figure-equivalent sweep: n_runs seeded sims per worker count, serial
     # in-process vs fanned across the pool (what the fig13/14/20/25

@@ -22,15 +22,16 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help="comma-separated subset (fig13,fig14,table1,"
                          "fig10,fig18,fig20,fig22,fig25,fig16,figtopo,"
-                         "figplace,figsync,figfault,figfleet,roofline)")
+                         "figplace,figsync,figfault,figfleet,figcal,"
+                         "roofline)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     from . import (fig10_overhead, fig13_batch_sizes, fig14_models,
                    fig16_interleaving, fig18_orderings, fig20_cloud,
-                   fig22_runtime, fig25_two_ps, fig_faults, fig_fleet,
-                   fig_placement, fig_syncmode, fig_topology, roofline,
-                   table1_multiplexing)
+                   fig22_runtime, fig25_two_ps, fig_calibrate, fig_faults,
+                   fig_fleet, fig_placement, fig_syncmode, fig_topology,
+                   roofline, table1_multiplexing)
 
     fast = args.fast
     jobs = [
@@ -66,6 +67,7 @@ def main() -> None:
         ("figsync", lambda: fig_syncmode.run(fast=fast)),
         ("figfault", lambda: fig_faults.run(fast=fast)),
         ("figfleet", lambda: fig_fleet.run(fast=fast)),
+        ("figcal", lambda: fig_calibrate.run(fast=fast)),
         ("roofline", lambda: roofline.run()),
     ]
 

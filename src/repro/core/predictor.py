@@ -15,7 +15,7 @@ from typing import Dict, List, Optional, Sequence
 
 from repro.core import baselines as bl
 from repro.core.bandwidth import BandwidthModel, EqualShareModel
-from repro.core.events import StepTemplate, ps_resources
+from repro.core.events import LINK, StepTemplate, ps_resources
 from repro.core.faults import FaultSpec
 from repro.core.overhead import (OverheadModel, RecordedStep,
                                  preprocess_profile)
@@ -74,6 +74,14 @@ class PredictionRun:
     # engine and the emulator (both keyed off spec.fault_seed), so
     # prediction and ground truth see identical churn.
     faults: Optional["FaultSpec"] = None
+    # Fitted parameters from observed traces (repro.calibrate).  None =
+    # predict from the profile + platform nominals alone (the paper's
+    # open-loop mode).  A profile overrides per-op compute times and
+    # parse alpha/beta in the preprocessed templates, and per-link
+    # capacities / the flow-control stall rate in the sim config; a
+    # profile whose values equal the profiled medians and nominals is
+    # provably inert (bit-identical traces — see tests/test_calibrate.py).
+    calibration: Optional["CalibrationProfile"] = None
 
     # filled by prepare()
     profile: List[RecordedStep] = field(default_factory=list)
@@ -105,7 +113,31 @@ class PredictionRun:
             steps=self.profile_steps, seed=self.seed,
             flow_control=self.flow_control, order=self.order)
         self.sim_steps_templates = preprocess_profile(self.profile, self.overhead)
+        if self.calibration is not None:
+            self.sim_steps_templates = self.calibration.apply_to_templates(
+                self.sim_steps_templates, fallback_overhead=self.overhead)
         return self
+
+    def with_calibration(self, profile) -> "PredictionRun":
+        """Clone this (possibly prepared) run under a fitted
+        :class:`~repro.calibrate.fit.CalibrationProfile` (or back to the
+        open loop with ``None``).
+
+        ``replace()`` carries the prepared fields over, so the clone's
+        templates are **rebuilt** from the stored 1-worker profile and
+        the new calibration — a stale copy of the old calibrated
+        templates would silently ignore the profile.  Re-preprocessing
+        with the same overhead model is deterministic, so the
+        ``profile=None`` round trip is bit-identical to never having
+        calibrated."""
+        out = replace(self, calibration=profile)
+        if self.profile and self.overhead is not None:
+            out.sim_steps_templates = preprocess_profile(out.profile,
+                                                         out.overhead)
+            if profile is not None:
+                out.sim_steps_templates = profile.apply_to_templates(
+                    out.sim_steps_templates, fallback_overhead=out.overhead)
+        return out
 
     def with_topology(self, topology: Optional[Topology]) -> "PredictionRun":
         """Clone this (possibly prepared) run under a different topology.
@@ -143,10 +175,28 @@ class PredictionRun:
         # and the platform RTT, both part of the paper's one-time
         # per-cluster calibration
         alpha = self.overhead.alpha if self.overhead else 0.0
+        resources = (self.topology.resources(plat.bandwidth)
+                     if self.topology is not None
+                     else ps_resources(plat.bandwidth, self.num_ps))
+        cal_digest = None
+        if self.calibration is not None:
+            # fitted parse rate drives the HTTP/2 burst-stall term, and
+            # fitted per-link capacities replace the platform nominal in
+            # the per-link specs (the equal-share paper path; compiled
+            # topology capacity groups keep their fabric-derived rates)
+            cal_oh = self.calibration.overhead_model()
+            if cal_oh is not None:
+                alpha = cal_oh.alpha
+            resources = {
+                name: (replace(spec,
+                               bandwidth=self.calibration.capacity_for(name))
+                       if spec.kind == LINK
+                       and self.calibration.capacity_for(name)
+                       else spec)
+                for name, spec in resources.items()}
+            cal_digest = self.calibration.digest
         return SimConfig(
-            resources=(self.topology.resources(plat.bandwidth)
-                       if self.topology is not None
-                       else ps_resources(plat.bandwidth, self.num_ps)),
+            resources=resources,
             topology=self.topology,
             link_policy=policy,
             win=self.win_estimate or plat.win_mu,
@@ -163,6 +213,7 @@ class PredictionRun:
             allreduce_algo=self.allreduce_algo,
             waterfill=self.waterfill,
             faults=self.faults,
+            calibration_digest=cal_digest,
         )
 
     def templates_for(self, num_workers: int) -> list:
@@ -254,12 +305,16 @@ class PredictionRun:
         outs = parallel_map(simulate_task, tasks, parallel=parallel)
         predicted = sum(outs) / len(outs)
         if ledger.resolve_path() is not None:
+            config = {"dnn": self.dnn, "batch_size": self.batch_size,
+                      "platform": self.platform, "num_ps": self.num_ps,
+                      "num_workers": num_workers, "n_runs": n_runs,
+                      "seed": self.seed}
+            # key present only when calibrated: open-loop records (and
+            # their config digests) are unchanged by this feature
+            if self.calibration is not None:
+                config["calibration"] = self.calibration.digest
             ledger.log(
-                "predict",
-                config={"dnn": self.dnn, "batch_size": self.batch_size,
-                        "platform": self.platform, "num_ps": self.num_ps,
-                        "num_workers": num_workers, "n_runs": n_runs,
-                        "seed": self.seed},
+                "predict", config=config,
                 engine="scalar", predicted=predicted,
                 wall_s=_time.perf_counter() - t0)
         return predicted

@@ -160,6 +160,11 @@ class SimConfig:
     # the schedule is drawn from the spec's own fault_seed, never from the
     # simulation RNG.
     faults: Optional[FaultSpec] = None
+    # Digest of the CalibrationProfile whose fitted parameters produced
+    # this config (repro.calibrate).  Provenance only: the engine never
+    # reads it, but stamps it into ``trace.meta`` so every downstream
+    # trace/ledger record names the exact parameter set it was run under.
+    calibration_digest: Optional[str] = None
 
     def sync_spec(self) -> SyncSpec:
         return SyncSpec(mode=self.sync_mode,
@@ -936,6 +941,9 @@ class Simulation:
             "num_versions": sync_ctl.version,
             "barrier_commits": list(sync_ctl.commits),
         }
+        if cfg.calibration_digest is not None:
+            trace.meta["calibration_digest"] = \
+                cfg.calibration_digest  # type: ignore[attr-defined]
         if fault_mode:
             trace.meta.update(  # type: ignore[attr-defined]
                 useful_work_s=useful_s,

@@ -951,6 +951,28 @@ def measure_throughput(dnn: DnnSpec, batch_size: int, platform: Platform,
     return emu.throughput(warmup_steps=warmup_steps)
 
 
+def observe_run(dnn: DnnSpec, batch_size: int, platform: Platform,
+                num_workers: int, num_ps: int = 1, steps: int = 100,
+                seed: int = 0, flow_control: bool = True,
+                order: str = "profiled",
+                warmup_steps: int = 50,
+                topology: Optional[Topology] = None,
+                sync: Optional[SyncSpec] = None,
+                faults: Optional[FaultSpec] = None
+                ) -> Tuple[float, List[RecordedStep]]:
+    """One observed run for the calibration loop: ground-truth
+    throughput **plus** the TF-style recorded steps it was measured from
+    (``measure_throughput`` discards them).  ``repro.calibrate`` feeds
+    the steps to the fitter and compares predictions to the throughput —
+    predict → execute → compare → refit."""
+    emu = ClusterEmulator(dnn, batch_size, platform, num_workers=num_workers,
+                          num_ps=num_ps, seed=seed, flow_control=flow_control,
+                          order=order, topology=topology, sync=sync,
+                          faults=faults, record_profile=True)
+    emu.run(steps_per_worker=steps)
+    return emu.throughput(warmup_steps=warmup_steps), emu.profiled_steps
+
+
 def probe_parse_overheads(platform: Platform, sizes: Sequence[float],
                           seed: int = 0) -> List[float]:
     """Microbenchmark of receiver parse cost vs size (Fig. 10 data)."""

@@ -33,7 +33,11 @@ Two further PS-cluster what-ifs close the paper's §6 scheduler loop:
   * ``--optimize-placement [greedy|exhaustive|anneal]`` searches
     shard->node mappings of the topology (``repro.core.placement_search``)
     and reports the chosen placement and its predicted speedup over the
-    topology's default placement.
+    topology's default placement;
+  * ``--calibrate traces/`` fits a :class:`CalibrationProfile` from a
+    recorded-step trace corpus (``repro.calibrate``) and predicts with
+    the fitted per-op times / link capacities instead of the profiled
+    templates and platform nominals — the closed calibration loop.
 
 The synchronization regime is a what-if axis too (``repro.core.syncmode``):
 
@@ -158,6 +162,18 @@ def ps_cluster_main(args) -> None:
                          staleness_bound=args.staleness_bound,
                          allreduce_algo=args.allreduce_algo,
                          waterfill=args.waterfill).prepare()
+    if args.calibrate:
+        # closed-loop mode: override the profiled templates and platform
+        # nominals with parameters fitted from observed traces
+        from repro.calibrate.extract import load_trace_runs
+        from repro.calibrate.loop import fit_from_runs
+        prof = fit_from_runs(load_trace_runs(args.calibrate), run=base)
+        base = base.with_calibration(prof)
+        counts = prof.sample_counts
+        print(f"# calibration: {args.calibrate} -> profile "
+              f"{prof.digest} ({counts.get('steps', 0)} steps, "
+              f"{len(prof.op_times)} ops, "
+              f"{len(prof.link_capacity)} links)")
     topo = build_whatif_topology(wmax, args.num_ps, oversub=args.oversub,
                                  racks=args.racks, ps_nic=args.ps_nic,
                                  colocate_ps=args.colocate_ps)
@@ -561,6 +577,11 @@ def main() -> None:
                          "per-link rate counters); fleet mode exports "
                          "per-job step timelines plus the shared fabric's "
                          "contention counters")
+    ap.add_argument("--calibrate", metavar="TRACES", default=None,
+                    help="closed-loop mode: fit a CalibrationProfile from "
+                         "a recorded-step trace file or directory "
+                         "(repro.calibrate trace json) and predict with "
+                         "it (PS-cluster mode)")
     ap.add_argument("--profile-steps", type=int, default=30)
     ap.add_argument("--sim-steps", type=int, default=250)
     ap.add_argument("--waterfill", default="auto",
@@ -599,6 +620,9 @@ def main() -> None:
         if args.mttf or args.mttr or args.preempt_rate or args.degrade_links:
             ap.error("--mttf/--mttr/--preempt-rate/--degrade-links require "
                      "--ps-cluster (fault injection runs in the PS DES)")
+        if args.calibrate:
+            ap.error("--calibrate requires --ps-cluster (trace-fitted "
+                     "profiles apply to the PS prediction pipeline)")
 
     if args.backup_workers and args.sync_mode != "sync":
         ap.error("--backup-workers only relaxes the sync-mode barrier "

@@ -13,8 +13,12 @@ canonical JSON, so "same configuration" is machine-checkable), engine
 and solver stats, wall time, predicted throughput and — when both the
 DES prediction and the emulator measurement ran — the prediction error.
 ``python -m repro.obs.report`` renders per-figure error bands off this
-file and compares two ledgers for drift, the feedback half of the
-ROADMAP's closed-loop calibration item.
+file and compares two ledgers for drift — the detection half of
+closed-loop calibration.  ``repro.calibrate.loop`` closes it: when the
+drift gate fires it refits a ``CalibrationProfile`` from accumulated
+traces, re-predicts, and appends a ``"recalibrated"`` record (extra keys
+``calibration_digest``, pre/post errors) so the ledger itself narrates
+every parameter change.
 """
 from __future__ import annotations
 

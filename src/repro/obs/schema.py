@@ -30,6 +30,10 @@ Optional keys
   link_resources    LINK-kind resource names (recorded-trace runs; the
                     Chrome exporter uses it to classify tracks)
   contention        fleet meta only: per-link (t, active) timelines
+  calibration_digest
+                    digest of the CalibrationProfile the run's config
+                    was built from (``repro.calibrate``; absent on
+                    open-loop runs)
 """
 from __future__ import annotations
 
@@ -52,6 +56,7 @@ OPTIONAL_KEYS = frozenset({
     "useful_work_s", "wasted_work_s", "wasted_s", "lost_steps",
     "num_incidents", "waterfill", "metrics", "batch_fallback",
     "batch_fallback_reason", "link_resources", "contention", "num_jobs",
+    "calibration_digest",
 })
 
 _SYNC_MODES = ("async", "sync", "ssp", "allreduce")

@@ -386,3 +386,37 @@ def test_report_cli_compare_exit_code(tmp_path):
     assert report.main([new]) == 0
     assert report.main([new, "--compare", old]) == 1
     assert report.main([old, "--compare", old]) == 0
+
+
+def test_report_compare_subset_is_informational(tmp_path, capsys):
+    """A new ledger covering a strict subset of the baseline's figures
+    (fast CI smoke vs nightly full suite, or the calibration loop's
+    first partial round) must skip the missing figures, never drift."""
+    from repro.obs import report
+    new = str(tmp_path / "new.jsonl")
+    old = str(tmp_path / "old.jsonl")
+    ledger.log("figure", path=old, figure="f1", mean_err=0.02)
+    ledger.log("figure", path=old, figure="f2", mean_err=0.03)
+    ledger.log("figure", path=old, figure="f3", mean_err=0.04)
+    ledger.log("figure", path=new, figure="f1", mean_err=0.02)
+    assert report.main([new, "--compare", old]) == 0
+    out = capsys.readouterr().out
+    assert "skip" in out and "informational" in out
+    assert "verdict: OK" in out
+    # and the symmetric case: new figures the baseline has never seen
+    ledger.log("figure", path=new, figure="f9", mean_err=0.7)
+    assert report.main([new, "--compare", old]) == 0
+
+
+def test_report_compare_missing_ledger_skips(tmp_path, capsys):
+    """No ledger file on either side of --compare is 'nothing observed
+    yet' (exit 0, SKIP verdict); in summary mode it is a hard error."""
+    from repro.obs import report
+    old = str(tmp_path / "old.jsonl")
+    ledger.log("figure", path=old, figure="f1", mean_err=0.02)
+    missing = str(tmp_path / "nope.jsonl")
+    assert report.main([missing, "--compare", old]) == 0
+    assert "SKIP" in capsys.readouterr().out
+    assert report.main([old, "--compare", missing]) == 0
+    assert "SKIP" in capsys.readouterr().out
+    assert report.main([missing]) == 2
